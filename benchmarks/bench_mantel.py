@@ -1,0 +1,61 @@
+"""Paper Table 2: mantel runtimes.
+
+Baseline = the paper's literal original (Algorithm 3): per permutation,
+NumPy row+column fancy-indexing to materialize the permuted matrix,
+condense to the upper triangle, and call black-box
+``scipy.stats.pearsonr`` (which re-derives mean/norm from scratch).
+Optimized = Algorithm 5: hoisted invariants + one fused gather-multiply-
+reduce per permutation. K=199 (paper: 999 — the ratio is K-independent,
+both paths are linear in K).
+"""
+
+import numpy as np
+from scipy.stats import pearsonr
+
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.core.distance_matrix import random_distance_matrix
+from repro.core.mantel import mantel
+
+
+def mantel_numpy_original(x: np.ndarray, y: np.ndarray, permutations: int,
+                          seed: int = 0):
+    """Algorithm 3+4 verbatim."""
+    n = x.shape[0]
+    iu = np.triu_indices(n, k=1)
+    x_flat = x[iu]
+    y_flat = y[iu]
+    orig_stat = pearsonr(x_flat, y_flat).statistic
+    rng = np.random.default_rng(seed)
+    permuted_stats = np.empty(permutations)
+    for p in range(permutations):
+        perm = rng.permutation(n)
+        x_perm_flat = x[perm][:, perm][iu]
+        permuted_stats[p] = pearsonr(x_perm_flat, y_flat).statistic
+    count = (np.abs(permuted_stats) >= abs(orig_stat)).sum()
+    return orig_stat, (count + 1) / (permutations + 1)
+
+
+def run(sizes=(512, 1024, 2048), permutations=199):
+    print("\n# Table 2 — mantel (NumPy+scipy original vs hoisted+fused), "
+          f"K={permutations}")
+    results = {}
+    for n in sizes:
+        x = random_distance_matrix(jax.random.PRNGKey(n), n)
+        y = random_distance_matrix(jax.random.PRNGKey(n + 1), n)
+        x_np, y_np = np.asarray(x.data, np.float64), np.asarray(y.data,
+                                                                np.float64)
+        t_ref = time_fn(mantel_numpy_original, x_np, y_np, permutations,
+                        repeats=1, warmup=0)
+        row("table2", f"mantel_k{permutations}", "original", n, t_ref)
+        key = jax.random.PRNGKey(7)
+        t_opt = time_fn(mantel, x, y, permutations, key, repeats=2)
+        row("table2", f"mantel_k{permutations}", "fused", n, t_opt,
+            baseline=t_ref)
+        results[n] = {"original": t_ref, "fused": t_opt}
+    return results
+
+
+if __name__ == "__main__":
+    run()

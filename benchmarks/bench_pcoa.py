@@ -1,0 +1,40 @@
+"""Paper §4.1 end-to-end: pcoa with original vs fused centering, plus the
+validation-caching effect (pcoa internally copies its DistanceMatrix —
+paper §4.3 last paragraph)."""
+
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.core.distance_matrix import DistanceMatrix, random_distance_matrix
+from repro.core.pcoa import pcoa
+
+
+def run(sizes=(2048, 4096)):
+    print("\n# §4.1 — pcoa end-to-end (fsvd, k=10)")
+    results = {}
+    for n in sizes:
+        dm = random_distance_matrix(jax.random.PRNGKey(n), n, dim=8)
+        # PCoAResults is not a pytree — block on the coordinates explicitly
+        t_ref = time_fn(
+            lambda d: pcoa(d, centering_impl="ref").coordinates, dm,
+            repeats=2)
+        row("pcoa", "pcoa_fsvd", "orig-ctr", n, t_ref)
+        t_fused = time_fn(
+            lambda d: pcoa(d, centering_impl="fused").coordinates, dm,
+            repeats=2)
+        row("pcoa", "pcoa_fsvd", "fused-ctr", n, t_fused, baseline=t_ref)
+        results[n] = {"original": t_ref, "fused": t_fused}
+
+    # validation caching: constructing from a validated copy is ~free
+    n = sizes[-1]
+    dm = random_distance_matrix(jax.random.PRNGKey(0), n)
+    t_reval = time_fn(lambda: DistanceMatrix(dm.data), repeats=2)
+    row("pcoa", "construct", "revalidate", n, t_reval)
+    t_copy = time_fn(lambda: dm.copy(), repeats=2)
+    row("pcoa", "construct", "cached", n, t_copy, baseline=t_reval)
+    results["validation_caching"] = {"revalidate": t_reval, "copy": t_copy}
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Table 3: distance-matrix validation.
+
+Baseline = Algorithm 6 verbatim in NumPy: ``(mat.T != mat).any()``
+materializes a full boolean matrix (plus the lazy transpose forcing a
+strided second pass), and ``np.trace`` is yet another pass. Optimized =
+the fused single-pass jit (Algorithm 7 semantics).
+"""
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.core.distance_matrix import random_distance_matrix
+from repro.core.validation import (is_symmetric_and_hollow,
+                                   is_symmetric_and_hollow_blocked)
+
+
+def validation_numpy_original(mat: np.ndarray):
+    not_sym = (mat.T != mat).any()
+    not_hollow = np.trace(mat) != 0
+    return (not not_sym), (not not_hollow)
+
+
+def run(sizes=(4096, 8192, 12288)):
+    print("\n# Table 3 — is_symmetric_and_hollow (NumPy original vs fused)")
+    results = {}
+    for n in sizes:
+        dm = random_distance_matrix(jax.random.PRNGKey(n), n).data
+        dm_np = np.asarray(dm)
+        t_ref = time_fn(validation_numpy_original, dm_np, repeats=2)
+        row("table3", "validation", "original", n, t_ref)
+        t_fused = time_fn(is_symmetric_and_hollow, dm)
+        row("table3", "validation", "fused", n, t_fused, baseline=t_ref)
+        t_blk = time_fn(is_symmetric_and_hollow_blocked, dm, block=1024)
+        row("table3", "validation", "blocked", n, t_blk, baseline=t_ref)
+        results[n] = {"original": t_ref, "fused": t_fused}
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Benchmark timing utilities."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Best-of-N wall time with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(table: str, workload: str, impl: str, n: int, seconds: float,
+        baseline: float = None):
+    speed = f"{baseline / seconds:8.1f}x" if baseline else "        "
+    print(f"{table:12s} {workload:22s} {impl:10s} n={n:<7d} "
+          f"{seconds * 1e3:10.1f} ms {speed}")
+    return seconds

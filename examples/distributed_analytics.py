@@ -1,0 +1,58 @@
+"""Pod-scale analytics demo: the paper's algorithms under shard_map.
+
+Runs on 8 emulated devices (this file sets the device-count flag FIRST,
+so run it as a script, not an import):
+
+    PYTHONPATH=src python examples/distributed_analytics.py
+
+Shows the DESIGN §2 claim: block-local two-pass centering with one O(n)
+psum per pass, and permutation-parallel Mantel — only O(n) bytes and
+per-permutation scalars cross the interconnect.
+"""
+
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main(n: int = 4096, permutations: int = 64):
+    from repro.core import random_distance_matrix
+    from repro.core.centering import (center_distance_matrix,
+                                      center_distance_matrix_distributed)
+    from repro.core.mantel import mantel, mantel_distributed
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"== distributed analytics on mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} ==")
+
+    dm = random_distance_matrix(jax.random.PRNGKey(0), n).data
+    t0 = time.perf_counter()
+    f_dist = center_distance_matrix_distributed(dm, mesh)
+    jax.block_until_ready(f_dist)
+    t_dist = time.perf_counter() - t0
+    f_local = center_distance_matrix(dm)
+    err = float(np.abs(np.asarray(f_dist) - np.asarray(f_local)).max())
+    print(f"centering: distributed {t_dist:.2f}s, max|Δ| vs fused = "
+          f"{err:.2e}")
+
+    x = random_distance_matrix(jax.random.PRNGKey(1), n // 4)
+    y = random_distance_matrix(jax.random.PRNGKey(2), n // 4)
+    key = jax.random.PRNGKey(9)
+    t0 = time.perf_counter()
+    s_d, p_d, _ = mantel_distributed(x, y, mesh, permutations=permutations,
+                                     key=key)
+    t_dist = time.perf_counter() - t0
+    s_l, p_l, _ = mantel(x, y, permutations=permutations, key=key)
+    print(f"mantel: distributed {t_dist:.2f}s — r={s_d:.4f} (local "
+          f"{s_l:.4f}), p={p_d:.3f} (local {p_l:.3f})")
+    print("== done ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: atomic, elastic, async.
+
+* **Atomic** — a checkpoint is written to ``step_N.tmp/`` and renamed to
+  ``step_N/`` only after every leaf and the manifest are on disk; restore
+  considers only renamed directories, so a host killed mid-save can never
+  corrupt the restore point.
+* **Elastic** — leaves are stored in *unsharded logical layout* (one .npy
+  per pytree leaf, path-encoded). Restore takes a target mesh + spec tree
+  and ``device_put``s each leaf with its new NamedSharding: resuming on a
+  different pod count / mesh shape is transparent re-sharding
+  (tests/test_distributed.py exercises 8→4→8 device resumes).
+* **Async** — ``save(..., blocking=False)`` snapshots to host memory
+  (device_get) and writes on a background thread, overlapping I/O with
+  the next training steps; ``wait()`` joins before the next save.
+* **Self-pruning** — keeps the newest ``keep`` checkpoints.
+
+At true 1000-node scale each host would write only its address-space
+slice (ocp-style); the single-process layout here keeps the same
+interface and atomicity protocol. (Noted in DESIGN §5.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_LEAF_DIR = "leaves"
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _path_key(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(f"i{e.idx}")
+        else:
+            parts.append(_SAFE.sub("_", str(e)))
+    return "__".join(parts) or "root"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- discovery ---------------------------------------------------------
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.isfile(os.path.join(self.directory, name,
+                                                 "manifest.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             blocking: bool = True):
+        """Snapshot ``tree`` (device_get now), write (possibly async)."""
+        self.wait()
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        host = []
+        dtypes = {}
+        for p, x in flat:
+            k = _path_key(p)
+            arr = np.asarray(jax.device_get(x))
+            dtypes[k] = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":   # ml_dtypes (bf16 etc.):
+                arr = arr.view(np.uint16 if arr.itemsize == 2 else np.uint8)
+            host.append((k, arr))
+        meta = dict(metadata or {})
+        meta["step"] = step
+        meta["leaves"] = [k for k, _ in host]
+        meta["dtypes"] = dtypes
+
+        def _write():
+            final = os.path.join(self.directory, f"step_{step}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(os.path.join(tmp, _LEAF_DIR))
+            for k, arr in host:
+                np.save(os.path.join(tmp, _LEAF_DIR, k + ".npy"), arr)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)          # atomic publish
+            self._prune()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------
+    def restore(self, template: Any, step: Optional[int] = None,
+                mesh=None, specs: Any = None):
+        """Restore into the structure of ``template`` (values ignored).
+
+        With (mesh, specs): every leaf is device_put with its
+        NamedSharding — elastic re-shard onto any mesh. Returns
+        (tree, metadata).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        base = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(base, "manifest.json")) as f:
+            meta = json.load(f)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        spec_leaves = (treedef.flatten_up_to(specs) if specs is not None
+                       else [None] * len(flat))
+        dtypes = meta.get("dtypes", {})
+        out = []
+        for (path, tmpl), spec in zip(flat, spec_leaves):
+            k = _path_key(path)
+            arr = np.load(os.path.join(base, _LEAF_DIR, k + ".npy"))
+            true_dt = dtypes.get(k)
+            if true_dt and str(arr.dtype) != true_dt:
+                import ml_dtypes
+                arr = arr.view(np.dtype(true_dt))
+            arr = arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr
+            if mesh is not None and spec is not None:
+                from jax.sharding import NamedSharding
+                out.append(jax.device_put(arr, NamedSharding(mesh, spec)))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return treedef.unflatten(out), meta

@@ -1,0 +1,31 @@
+"""Arch registry: importing this package registers all 10 assigned
+architectures (and their smoke reductions) into ``ARCHS`` / ``SMOKES``.
+
+``--arch <id>`` ids use the assignment's spelling (dots/dashes); module
+names use underscores.
+"""
+
+from repro.configs.base import ARCHS, SMOKES, SHAPES, ModelConfig, ShapeConfig
+
+# importing registers
+from repro.configs import recurrentgemma_9b      # noqa: F401
+from repro.configs import phi_3_vision_4_2b      # noqa: F401
+from repro.configs import grok_1_314b            # noqa: F401
+from repro.configs import granite_moe_1b_a400m   # noqa: F401
+from repro.configs import qwen3_8b               # noqa: F401
+from repro.configs import nemotron_4_340b        # noqa: F401
+from repro.configs import llama3_2_3b            # noqa: F401
+from repro.configs import qwen1_5_4b             # noqa: F401
+from repro.configs import mamba2_1_3b            # noqa: F401
+from repro.configs import seamless_m4t_medium    # noqa: F401
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(table)}")
+    return table[name]
+
+
+__all__ = ["ARCHS", "SMOKES", "SHAPES", "ModelConfig", "ShapeConfig",
+           "get_arch"]

@@ -1,0 +1,36 @@
+"""Core paper contribution: memory-access-optimized distance-matrix analytics.
+
+Paper: Sfiligoi, McDonald, Knight — "Accelerating key bioinformatics tasks
+100-fold by improving memory access" (PEARC '21).
+"""
+
+from repro.core.distance_matrix import (
+    DistanceMatrix,
+    DistanceMatrixError,
+    condensed_to_square,
+    random_distance_matrix,
+)
+from repro.core.validation import (
+    is_symmetric_and_hollow,
+    is_symmetric_and_hollow_blocked,
+    is_symmetric_and_hollow_ref,
+)
+from repro.core.centering import (
+    center_distance_matrix,
+    center_distance_matrix_blocked,
+    center_distance_matrix_distributed,
+    center_distance_matrix_ref,
+)
+from repro.core.mantel import mantel, mantel_distributed, mantel_ref, pearsonr_ref
+from repro.core.pcoa import PCoAResults, pcoa
+
+__all__ = [
+    "DistanceMatrix", "DistanceMatrixError", "condensed_to_square",
+    "random_distance_matrix",
+    "is_symmetric_and_hollow", "is_symmetric_and_hollow_blocked",
+    "is_symmetric_and_hollow_ref",
+    "center_distance_matrix", "center_distance_matrix_blocked",
+    "center_distance_matrix_distributed", "center_distance_matrix_ref",
+    "mantel", "mantel_distributed", "mantel_ref", "pearsonr_ref",
+    "PCoAResults", "pcoa",
+]

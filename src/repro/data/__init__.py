@@ -1,0 +1,4 @@
+from repro.data.pipeline import TokenPipeline, make_batch_specs
+from repro.data.distance import DistanceTileStream
+
+__all__ = ["TokenPipeline", "make_batch_specs", "DistanceTileStream"]

@@ -1,0 +1,82 @@
+"""Deterministic, shard-aware synthetic token pipeline.
+
+Properties a 1000-node training job needs from its data layer, reproduced
+here without an external corpus:
+
+* **determinism by (step, position)** — batches are a pure function of the
+  global step, so restart/elastic-resume produces byte-identical data
+  regardless of host count or mesh shape;
+* **host-sharded** — each process materializes only its slice of the
+  global batch (``process_index``/``process_count``);
+* **learnable structure** — tokens follow a noisy affine recurrence
+  ``t_{i+1} = (a·t_i + c) mod V`` with flip probability ``noise``, so a
+  real model demonstrably reduces loss on it (quickstart example), while
+  ``mode="uniform"`` gives i.i.d. tokens for pure throughput work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mode: str = "structured"          # structured | uniform
+    noise: float = 0.05
+    process_index: int = 0
+    process_count: int = 1
+
+    def __post_init__(self):
+        if self.global_batch % self.process_count:
+            raise ValueError("global_batch must divide over processes")
+        self.local_batch = self.global_batch // self.process_count
+        self._a = 31 % self.vocab or 1
+        self._c = 17 % self.vocab
+
+    def batch(self, step: int) -> dict:
+        """→ {"tokens": (local_B, S) int32, "targets": (local_B, S) int32}."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        rows = np.arange(self.local_batch) + self.process_index * self.local_batch
+        keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(
+            jnp.asarray(rows, jnp.uint32))
+
+        if self.mode == "uniform":
+            toks = jax.vmap(lambda k: jax.random.randint(
+                k, (self.seq_len + 1,), 0, self.vocab))(keys)
+        else:
+            def one_row(k):
+                k0, k1 = jax.random.split(k)
+                start = jax.random.randint(k0, (), 0, self.vocab)
+                flips = jax.random.bernoulli(k1, self.noise,
+                                             (self.seq_len + 1,))
+                rand = jax.random.randint(jax.random.fold_in(k1, 7),
+                                          (self.seq_len + 1,), 0, self.vocab)
+
+                def stepf(t, i):
+                    nxt = (self._a * t + self._c) % self.vocab
+                    nxt = jnp.where(flips[i], rand[i], nxt)
+                    return nxt, nxt
+
+                _, seq = jax.lax.scan(stepf, start,
+                                      jnp.arange(self.seq_len + 1))
+                return seq
+
+            toks = jax.vmap(one_row)(keys)
+        toks = jnp.asarray(toks, jnp.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def make_batch_specs(cfg, shape, dtype=jnp.int32) -> dict:
+    """ShapeDtypeStruct stand-ins for the training batch (dry-run inputs)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), dtype),
+             "targets": jax.ShapeDtypeStruct((b, s), dtype)}
+    return specs

@@ -1,0 +1,32 @@
+"""Pallas TPU kernels for the paper's memory-bound hot spots.
+
+Each kernel family has three files (harness convention):
+
+* ``<name>.py``      — the ``pl.pallas_call`` kernel with explicit BlockSpec
+                       VMEM tiling (TPU is the *target*; validated on CPU
+                       with ``interpret=True``);
+* ``<name>_ops.py``  — the jit'd public wrapper (padding, dtype handling,
+                       block-size selection);
+* ``<name>_ref.py``  — the pure-jnp oracle used by the allclose tests.
+
+Kernels (paper hot spots only — DESIGN §3):
+
+* ``center``       — two-pass fused PCoA centering (paper Algorithm 2).
+* ``symhollow``    — fused symmetric+hollow validation (paper Algorithm 7).
+* ``mantel_corr``  — batched permuted-Pearson reduction with Y-tile reuse
+                     (paper Algorithm 5, TPU-native formulation).
+* ``rmsnorm``      — the paper's fusion discipline applied to the LM stack's
+                     most common memory-bound op (3 passes → 1).
+"""
+
+from repro.kernels.center_ops import center_distance_matrix_pallas
+from repro.kernels.symhollow_ops import is_symmetric_and_hollow_pallas
+from repro.kernels.mantel_corr_ops import mantel_corr_pallas
+from repro.kernels.rmsnorm_ops import rmsnorm_pallas
+
+__all__ = [
+    "center_distance_matrix_pallas",
+    "is_symmetric_and_hollow_pallas",
+    "mantel_corr_pallas",
+    "rmsnorm_pallas",
+]

@@ -1,0 +1,102 @@
+"""Pallas kernel: two-pass fused PCoA centering (paper §4.1, Algorithm 2).
+
+TPU adaptation of the paper's Cython kernels (DESIGN §2):
+
+* pass 1 (``e_matrix_means_cy``): one sweep over D computing
+  ``E = -0.5 * D * D``, the per-row sums and the global sum. The row-sum and
+  global-sum outputs *revisit* the same block across the column grid
+  dimension — TPU grids iterate sequentially (last dim fastest), so the
+  accumulation is race-free. This is the Pallas idiom for the paper's
+  "compute the means while the data is already in cache".
+* pass 2 (``f_matrix_inplace_cy``): tiled application of
+  ``F = E - rm[i] - rm[j] + gm``. The paper's 16x16 CPU tiles (64-byte cache
+  lines) become (block_m, block_n) VMEM tiles aligned to the fp32 native
+  (8, 128) tile; the row-means vector plays the role of the cache-resident
+  ``row_means`` buffer.
+
+The symmetry trick is preserved exactly: row means are also the column
+means, so pass 1 reduces along one axis only.
+
+HBM traffic: read D once, write E once (pass 1); read E, write F (pass 2)
+= 2 reads + 2 writes of the matrix + O(n) vectors — the paper's bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pass1_kernel(d_ref, e_ref, rowsum_ref, gsum_ref):
+    """E = -0.5 * D * D, accumulating row sums and the global sum."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    d = d_ref[...]
+    e = -0.5 * d * d
+    e_ref[...] = e
+
+    # rowsum block is indexed by i only: zero it on the first column step.
+    @pl.when(j == 0)
+    def _init_rowsum():
+        rowsum_ref[...] = jnp.zeros_like(rowsum_ref)
+
+    # global-sum block is shared by the whole grid: zero it once.
+    @pl.when((i == 0) & (j == 0))
+    def _init_gsum():
+        gsum_ref[...] = jnp.zeros_like(gsum_ref)
+
+    rowsum_ref[...] += jnp.sum(e, axis=1)
+    gsum_ref[...] += jnp.sum(e)[None]
+
+
+def _pass2_kernel(e_ref, rm_row_ref, rm_col_ref, gm_ref, out_ref):
+    """F = E - rm[i] - rm[j] + gm, one VMEM tile at a time."""
+    e = e_ref[...]
+    rm_i = rm_row_ref[...]          # (block_m,)  — this tile's row means
+    rm_j = rm_col_ref[...]          # (block_n,)  — this tile's col means (= row means, symmetry)
+    gm = gm_ref[0]
+    out_ref[...] = e - rm_i[:, None] - rm_j[None, :] + gm
+
+
+def center_pass1(d: jax.Array, *, block_m: int, block_n: int,
+                 interpret: bool = True):
+    """Returns (E, row_sums, global_sum[1])."""
+    n = d.shape[0]
+    grid = (n // block_m, n // block_n)
+    return pl.pallas_call(
+        _pass1_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), d.dtype),
+            jax.ShapeDtypeStruct((n,), d.dtype),
+            jax.ShapeDtypeStruct((1,), d.dtype),
+        ],
+        interpret=interpret,
+    )(d)
+
+
+def center_pass2(e: jax.Array, row_means: jax.Array, global_mean: jax.Array,
+                 *, block_m: int, block_n: int, interpret: bool = True):
+    """Returns F. ``global_mean`` is a (1,) array."""
+    n = e.shape[0]
+    grid = (n // block_m, n // block_n)
+    return pl.pallas_call(
+        _pass2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), e.dtype),
+        interpret=interpret,
+    )(e, row_means, row_means, global_mean)

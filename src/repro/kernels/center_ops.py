@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the fused centering kernel.
+
+Handles block-size selection (VMEM budget + (8,128) fp32 native-tile
+alignment), non-divisible shapes (pad to block multiple — padding rows
+contribute zeros to sums because D is padded with zeros and E = -D²/2),
+and the mean normalizations that the kernels leave as sums.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.center import center_pass1, center_pass2
+
+# VMEM is ~16 MiB/core on v5e; pass 1 holds one D tile + one E tile.
+# 512x512 fp32 = 1 MiB per tile: comfortable with double buffering.
+_DEFAULT_BLOCK = 512
+
+
+def _pick_block(n: int, requested: int) -> int:
+    """Largest multiple-of-8 block <= requested that keeps padding small."""
+    b = min(requested, n)
+    # round down to the fp32 sublane multiple; tiny inputs fall back to n.
+    if b >= 8:
+        b -= b % 8
+    return max(b, 1)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def center_distance_matrix_pallas(d: jax.Array, *, block_m: int = _DEFAULT_BLOCK,
+                                  block_n: int = _DEFAULT_BLOCK,
+                                  interpret: bool = True) -> jax.Array:
+    """Fused two-pass centering via the Pallas kernel.
+
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on a real TPU pass ``interpret=False``.
+    """
+    n = d.shape[0]
+    bm = _pick_block(n, block_m)
+    bn = _pick_block(n, block_n)
+    pad_m = (-n) % bm
+    pad_n = (-n) % bn
+    pad = max(pad_m, pad_n)  # keep it square
+    np_ = n + pad
+    bm = _pick_block(np_, bm)
+    bn = _pick_block(np_, bn)
+    d_p = jnp.pad(d, ((0, pad), (0, pad))) if pad else d
+
+    e, row_sums, gsum = center_pass1(d_p, block_m=bm, block_n=bn,
+                                     interpret=interpret)
+    # normalize with the TRUE n (padding rows/cols are zero in E and sums)
+    row_means = row_sums / n
+    global_mean = (gsum / n) / n
+    f = center_pass2(e, row_means, global_mean, block_m=bm, block_n=bn,
+                     interpret=interpret)
+    if pad:
+        f = f[:n, :n]
+        # padded rows contributed rm=0 so the interior is exact; nothing to fix
+    return f

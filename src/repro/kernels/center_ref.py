@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the centering kernel (paper Algorithm 1 semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def center_distance_matrix_ref(d: jax.Array) -> jax.Array:
+    """Gower double-centering: F = E - rowmean - colmean + mean, E = -D²/2."""
+    e = d * d / -2.0
+    row_means = e.mean(axis=1, keepdims=True)
+    col_means = e.mean(axis=0, keepdims=True)
+    matrix_mean = e.mean()
+    return e - row_means - col_means + matrix_mean

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the mantel_corr kernel: per-permutation Pearson r
+computed the original way (scipy pearsonr semantics, paper Algorithm 3+4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mantel_corr_ref(x: jax.Array, yhat_flat_unnormalized: jax.Array,
+                    orders: jax.Array) -> jax.Array:
+    """r[p] = pearsonr(condensed(x[perm_p][:, perm_p]), y_flat).
+
+    ``yhat_flat_unnormalized`` is the raw condensed y (the oracle re-derives
+    mean/norm from scratch each call, like the original implementation).
+    """
+    n = x.shape[0]
+    iu = np.triu_indices(n, k=1)
+    ym = yhat_flat_unnormalized - yhat_flat_unnormalized.mean()
+    ynorm = ym / jnp.linalg.norm(ym)
+
+    def one(order):
+        xp = x[order][:, order]
+        xf = xp[iu]
+        xm = xf - xf.mean()
+        return jnp.dot(xm / jnp.linalg.norm(xm), ynorm)
+
+    return jax.vmap(one)(orders)

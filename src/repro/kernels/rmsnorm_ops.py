@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import rmsnorm
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_pallas(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                   block_rows: int = 64, interpret: bool = True) -> jax.Array:
+    """Fused RMSNorm over the last axis of arbitrary-rank ``x``."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rmsnorm(x2, w, eps=eps, block_rows=br, interpret=interpret)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the fused validation kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.symhollow import symhollow
+
+_DEFAULT_BLOCK = 512
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def is_symmetric_and_hollow_pallas(mat: jax.Array, *, block: int = _DEFAULT_BLOCK,
+                                   interpret: bool = True):
+    """Fused single-pass validation. Returns (is_sym, is_hollow) booleans.
+
+    Zero-padding to a block multiple preserves both properties: a zero
+    border is symmetric and adds zero diagonal entries.
+    """
+    n = mat.shape[0]
+    b = min(block, n)
+    pad = (-n) % b
+    m = jnp.pad(mat, ((0, pad), (0, pad))) if pad else mat
+    is_sym, is_hollow = symhollow(m, block=b, interpret=interpret)
+    return is_sym[0] == 1, is_hollow[0] == 1

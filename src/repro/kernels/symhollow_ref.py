@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the validation kernel (paper Algorithm 6 semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def is_symmetric_and_hollow_ref(mat: jax.Array):
+    """Returns (is_sym: bool array, is_hollow: bool array)."""
+    not_sym = (mat.T != mat).any()
+    not_hollow = jnp.trace(jnp.abs(mat)) != 0  # |.| guards cancelling +/- diag
+    return jnp.logical_not(not_sym), jnp.logical_not(not_hollow)

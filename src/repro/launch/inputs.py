@@ -1,0 +1,59 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input
+(harness MULTI-POD DRY-RUN §2): weak-type-correct, shardable, no device
+allocation. The modality frontends are STUBS per the assignment: vision
+supplies precomputed CLIP patch embeddings, audio supplies precomputed
+w2v-BERT frame embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.runtime.serve import abstract_cache
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.is_encdec:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s // cfg.enc_len_ratio, cfg.frontend_dim), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    if cfg.frontend == "vision":
+        # patches fold into the sequence: text tokens fill the remainder
+        s_text = s - cfg.n_patches
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        specs["targets"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("targets")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """→ (token_spec, cache_spec_tree). Cache depth = shape.seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    enc_len = (s // cfg.enc_len_ratio) if cfg.is_encdec else 0
+    cache = abstract_cache(cfg, b, s, enc_len=enc_len)
+    return token, cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,36 @@
+"""Production mesh construction (harness spec, MULTI-POD DRY-RUN §1).
+
+``make_production_mesh`` is a FUNCTION — importing this module never
+touches jax device state. Callers (dryrun.py) are responsible for setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single device.
+
+Hardware model (TPU v5e targets, used by the roofline):
+    197 TFLOP/s bf16 / chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e constants for the roofline (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

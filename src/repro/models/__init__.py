@@ -1,0 +1,18 @@
+"""LM substrate: pure-JAX model definitions for the 10 assigned archs.
+
+Scan-over-layers keeps HLO size and compile time independent of depth;
+every block type exposes the same three entry points (train forward,
+prefill, single-token decode) so ``runtime/`` can drive any arch through
+any assigned input shape.
+"""
+
+from repro.models.transformer import (
+    init_params,
+    forward_train,
+    prefill,
+    decode_step,
+    init_cache,
+)
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step",
+           "init_cache"]

@@ -1,0 +1,308 @@
+"""Attention: GQA/MQA/MHA with RoPE, qk-norm, QKV bias, logit softcap,
+sliding windows, cross-attention — covering every assigned arch's variant.
+
+Memory discipline (the paper's rule, applied to the S×S intermediate):
+
+* ``train`` at moderate S uses one fused masked attention (XLA keeps the
+  fp32 scores transient; remat recomputes them in backward);
+* long-S paths (``prefill_32k``) never materialize S×S — a scan over query
+  chunks bounds the live scores buffer to (chunk, S), the direct analogue
+  of the paper's "split the problem into cache-sized portions";
+* ``decode`` is a single fused dot over the cache; the cache's sequence
+  axis is sharded over the TP axis (flash-decoding style — the softmax
+  reductions over the sharded axis become two tiny all-reduces, DESIGN §5).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def init_attn(key, cfg) -> dict:
+    d, h, k_, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h, hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, k_, hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, k_, hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h, hd, d)) * (h * hd) ** -0.5).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((k_, hd), dt)
+        p["bv"] = jnp.zeros((k_, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# projections
+# --------------------------------------------------------------------------
+def _project_q(p, x, positions, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+    if positions is not None:          # cross-attention queries carry no rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(p, x, positions, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"])
+    if positions is not None:           # cross-attention keys carry no rope
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# core scores → output (GQA grouping, softcap, fp32 softmax)
+# --------------------------------------------------------------------------
+def _attend(q, k, v, mask, cfg):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,K,hd); mask: broadcastable (B,1,Sq,Skv)
+    boolean (True = attend) or None.
+
+    GQA is computed by expanding K/V to the full head count (a repeat)
+    rather than the (K, G)-grouped einsum: reshaping a TP-sharded head
+    axis into (K, G) forces GSPMD into involuntary resharding (verified
+    on the dry-run — 50 GB/device of replicated transients); the repeat
+    keeps every tensor sharded on one clean head axis. The expanded K/V
+    transient is (B, S, H, hd)/|mesh| per layer — VMEM-scale after
+    sharding (EXPERIMENTS §Perf, iteration 0)."""
+    b, sq, h, hd = q.shape
+    n_kv = k.shape[2]
+    if n_kv != h and sq == 1:
+        # decode: heads are NOT TP-sharded (the cache's seq axis is), so
+        # the grouped einsum is shard-safe here and avoids materializing
+        # the G×-expanded K/V against the whole cache (nemotron: 12×).
+        g = h // n_kv
+        qg = q.reshape(b, sq, n_kv, g, hd)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+        scores = scores * (hd ** -0.5)
+        if cfg.attn_softcap:
+            scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+        if mask is not None:
+            scores = jnp.where(mask[:, :, None], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+        return out.reshape(b, sq, h, hd)
+    if n_kv != h:
+        g = h // n_kv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if cfg.attn_softcap:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return out
+
+
+def _causal_mask(sq: int, skv: int, offset: int = 0, window: int = 0):
+    """(1, 1, sq, skv) boolean; query i attends key j iff
+    j <= i+offset and (window == 0 or j > i+offset-window)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m[None, None]
+
+
+# --------------------------------------------------------------------------
+# train / prefill forward
+# --------------------------------------------------------------------------
+def attn_forward(p, x, positions, cfg, *, causal: bool = True,
+                 window: int = 0, kv_x: Optional[jax.Array] = None,
+                 kv_positions=None):
+    """Full attention over the sequence. Self-attention when kv_x is None.
+    Chunks queries when the S×S buffer would exceed the VMEM-scale budget
+    (the paper's tiling rule)."""
+    q = _project_q(p, x, positions, cfg)
+    if kv_x is None:
+        k, v = _project_kv(p, x, positions, cfg)
+    else:
+        k, v = _project_kv(p, kv_x, kv_positions, cfg)
+    sq, skv = q.shape[1], k.shape[1]
+
+    chunk = cfg.attn_chunk
+    if sq <= max(chunk, 2048):
+        mask = _causal_mask(sq, skv, window=window) if causal else None
+        out = _attend(q, k, v, mask, cfg)
+    else:
+        # scan over query chunks: live scores buffer is (chunk, skv)
+        nc = sq // chunk
+        qc = q.reshape(q.shape[0], nc, chunk, *q.shape[2:])
+        qc = jnp.moveaxis(qc, 1, 0)                     # (nc, B, chunk, H, hd)
+
+        def one_chunk(carry, args):
+            ci, qi = args
+            mask = (_causal_mask(chunk, skv, offset=ci * chunk, window=window)
+                    if causal else None)
+            return carry, _attend(qi, k, v, mask, cfg)
+
+        _, oc = jax.lax.scan(one_chunk, None, (jnp.arange(nc), qc))
+        out = jnp.moveaxis(oc, 0, 1).reshape(q.shape[0], sq, *q.shape[2:])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+# --------------------------------------------------------------------------
+# caches (optionally int8-quantized: §Perf Cell B's "next lever" — halves
+# the decode memory floor; per-(b,t,head) symmetric scales, dequantized at
+# read; a TPU deployment would fuse the dequant into the attention kernel)
+# --------------------------------------------------------------------------
+def _quantize_kv(x: jax.Array):
+    """x: (B, S, K, hd) → (int8 values, f32 scales (B, S, K))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, window: int = 0) -> dict:
+    """window > 0 → ring buffer of size window (local attention)."""
+    size = min(window, max_len) if window else max_len
+    dt = cfg.dtype("compute")
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+            "pos": jnp.full((size,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.full((size,), -1, jnp.int32),   # global position per slot
+    }
+
+
+def fill_cache_from_prefill(cache: dict, k: jax.Array, v: jax.Array,
+                            window: int = 0) -> dict:
+    """Store prefill K/V into the (possibly ring, possibly int8) cache."""
+    s = k.shape[1]
+    size = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    if window and s > size:
+        k, v = k[:, -size:], v[:, -size:]
+        pos = jnp.arange(s - size, s, dtype=jnp.int32)
+        slot = pos % size                      # ring layout
+        order = jnp.argsort(slot)
+        out = dict(cache)
+        if quant:
+            kq, ks = _quantize_kv(k[:, order])
+            vq, vs = _quantize_kv(v[:, order])
+            out.update(k=cache["k"].at[:, slot[order]].set(kq),
+                       v=cache["v"].at[:, slot[order]].set(vq),
+                       k_scale=cache["k_scale"].at[:, slot[order]].set(ks),
+                       v_scale=cache["v_scale"].at[:, slot[order]].set(vs))
+        else:
+            out.update(k=cache["k"].at[:, slot[order]].set(k[:, order]),
+                       v=cache["v"].at[:, slot[order]].set(v[:, order]))
+        out["pos"] = cache["pos"].at[slot[order]].set(pos[order])
+        return out
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        out.update(
+            k=jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0)),
+            k_scale=jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                 (0, 0, 0)),
+            v_scale=jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                 (0, 0, 0)))
+    else:
+        out.update(
+            k=jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)))
+    out["pos"] = cache["pos"].at[:s].set(pos)
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode: one token against the cache
+# --------------------------------------------------------------------------
+def attn_decode(p, x, cache, pos, cfg, *, window: int = 0):
+    """x: (B, 1, D); pos: scalar int32 (position of the new token).
+    Returns (out (B,1,D), new_cache)."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = _project_q(p, x, positions, cfg)
+    k_new, v_new = _project_kv(p, x, positions, cfg)
+
+    size = cache["k"].shape[1]
+    slot = (pos % size) if window else pos
+    quant = "k_scale" in cache
+    new_cache_extra = {}
+    if quant:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        k_store = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        v_store = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        k_sc = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        v_sc = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        k = _dequantize_kv(k_store, k_sc, x.dtype)
+        v = _dequantize_kv(v_store, v_sc, x.dtype)
+        new_cache_extra = {"k_scale": k_sc, "v_scale": v_sc}
+    else:
+        k_store = k = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                                   (0, slot, 0, 0))
+        v_store = v = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                                   (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        jnp.full((1,), pos, jnp.int32), (slot,))
+
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window:
+        valid = valid & (cpos > pos - window)
+    mask = valid[None, None, None, :]          # (1,1,1,size)
+    # barrier between the cache WRITE (bf16, becomes the scan carry) and
+    # the attention READ: the CPU backend emulates bf16 dots in f32, and
+    # without the barrier XLA promotes the whole cache carry to f32 —
+    # doubling the dominant memory term (host-compile artifact; on TPU
+    # the MXU reads bf16 natively and the barrier is a no-op).
+    k_read, v_read = jax.lax.optimization_barrier((k, v))
+    out = _attend(q, k_read, v_read, mask, cfg)
+    new_cache = {"k": k_store, "v": v_store, "pos": cpos, **new_cache_extra}
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def attn_decode_cross(p, x, cross_kv, cfg):
+    """Cross-attention decode: static precomputed encoder K/V (no rope)."""
+    q = _project_q(p, x, None, cfg)
+    k, v = cross_kv
+    out = _attend(q, k, v, None, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

@@ -1,0 +1,169 @@
+"""Encoder-decoder assembly (seamless-m4t): bidirectional encoder over
+stubbed audio-frame embeddings + causal decoder with cross-attention.
+
+Same scan-over-layers discipline as the decoder-only stack. The decoder
+cache holds per-layer self-attention K/V plus the precomputed
+cross-attention K/V (encoder keys never change during decode — computed
+once at prefill, the enc-dec analogue of the paper's "hoist the
+permutation-invariant part out of the loop").
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_norm, embed_tokens, init_embed,
+                                 init_mlp, init_norm, mlp)
+from repro.sharding import ctx as shard_ctx
+
+
+def _init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {"ln1": init_norm(cfg, d), "attn": attn_mod.init_attn(ks[0], cfg),
+            "ln2": init_norm(cfg, d), "mlp": init_mlp(ks[1], cfg, d, cfg.d_ff)}
+
+
+def _init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"ln1": init_norm(cfg, d), "self": attn_mod.init_attn(ks[0], cfg),
+            "ln_x": init_norm(cfg, d), "cross": attn_mod.init_attn(ks[1], cfg),
+            "ln2": init_norm(cfg, d), "mlp": init_mlp(ks[2], cfg, d, cfg.d_ff)}
+
+
+def init_params_encdec(key, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": init_embed(ks[2], cfg),
+        "frontend": {"proj": (jax.random.normal(ks[3], (cfg.frontend_dim,
+                                                        cfg.d_model))
+                              * cfg.frontend_dim ** -0.5).astype(cfg.dtype())},
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, S_enc, frontend_dim) stub embeddings → (B, S_enc, D)."""
+    x = jnp.einsum("bpf,fd->bpd", frames.astype(cfg.dtype("compute")),
+                   params["frontend"]["proj"])
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 x.shape[:2])
+
+    seq_dim = 1 if cfg.seq_shard_activations else None
+
+    def body(x, bp):
+        x = shard_ctx.constrain_batch(x, seq_dim=seq_dim)
+        h, _ = attn_mod.attn_forward(bp["attn"], apply_norm(bp["ln1"], x, cfg),
+                                     positions, cfg, causal=False)
+        x = x + h
+        x = x + mlp(bp["mlp"], apply_norm(bp["ln2"], x, cfg), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def _dec_block(bp, x, enc_out, positions, cfg):
+    h, _ = attn_mod.attn_forward(bp["self"], apply_norm(bp["ln1"], x, cfg),
+                                 positions, cfg, causal=True)
+    x = x + h
+    h, _ = attn_mod.attn_forward(bp["cross"], apply_norm(bp["ln_x"], x, cfg),
+                                 None, cfg, causal=False, kv_x=enc_out,
+                                 kv_positions=None)
+    x = x + h
+    return x + mlp(bp["mlp"], apply_norm(bp["ln2"], x, cfg), cfg)
+
+
+def forward_train_encdec(params, frames, tokens, cfg):
+    """→ (decoder hidden (B,S_dec,D), aux=0)."""
+    enc_out = encode(params, frames, cfg)
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 x.shape[:2])
+
+    seq_dim = 1 if cfg.seq_shard_activations else None
+
+    def body(x, bp):
+        x = shard_ctx.constrain_batch(x, seq_dim=seq_dim)
+        return _dec_block(bp, x, enc_out, positions, cfg), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_blocks"])
+    return apply_norm(params["final_norm"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def prefill_encdec(params, frames, tokens, cfg, max_len: Optional[int] = None):
+    """Encode + run the decoder prompt; build self + cross caches."""
+    enc_out = encode(params, frames, cfg)
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    s = x.shape[1]
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), x.shape[:2])
+
+    seq_dim = 1 if cfg.seq_shard_activations else None
+
+    def body(x, bp):
+        x = shard_ctx.constrain_batch(x, seq_dim=seq_dim)
+        norm_x = apply_norm(bp["ln1"], x, cfg)
+        h, (k, v) = attn_mod.attn_forward(bp["self"], norm_x, positions, cfg,
+                                          causal=True)
+        x = x + h
+        self_cache = attn_mod.init_attn_cache(cfg, x.shape[0], max_len)
+        self_cache = attn_mod.fill_cache_from_prefill(self_cache, k, v)
+        h, (ck, cv) = attn_mod.attn_forward(
+            bp["cross"], apply_norm(bp["ln_x"], x, cfg), None, cfg,
+            causal=False, kv_x=enc_out, kv_positions=None)
+        x = x + h
+        x = x + mlp(bp["mlp"], apply_norm(bp["ln2"], x, cfg), cfg)
+        return x, {"self": self_cache, "cross_k": ck, "cross_v": cv}
+
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    cache = {"dec": caches, "pos": jnp.asarray(s, jnp.int32)}
+    return apply_norm(params["final_norm"], x, cfg), cache
+
+
+def init_cache_encdec(cfg, batch: int, max_len: int, enc_len: int) -> dict:
+    def one(_):
+        return {"self": attn_mod.init_attn_cache(cfg, batch, max_len),
+                "cross_k": jnp.zeros((batch, enc_len, cfg.n_kv_heads,
+                                      cfg.head_dim), cfg.dtype("compute")),
+                "cross_v": jnp.zeros((batch, enc_len, cfg.n_kv_heads,
+                                      cfg.head_dim), cfg.dtype("compute"))}
+    return {"dec": jax.vmap(one)(jnp.arange(cfg.n_layers)),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step_encdec(params, token, cache, cfg):
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], token, cfg)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def body(x, args):
+        bp, c = args
+        x = shard_ctx.constrain_batch(x)
+        c = jax.lax.optimization_barrier(c)   # see transformer.decode_step
+        h, self_cache = attn_mod.attn_decode(
+            bp["self"], apply_norm(bp["ln1"], x, cfg), c["self"], pos, cfg)
+        x = x + h
+        h = attn_mod.attn_decode_cross(
+            bp["cross"], apply_norm(bp["ln_x"], x, cfg),
+            (c["cross_k"], c["cross_v"]), cfg)
+        x = x + h
+        x = x + mlp(bp["mlp"], apply_norm(bp["ln2"], x, cfg), cfg)
+        return x, {"self": self_cache, "cross_k": c["cross_k"],
+                   "cross_v": c["cross_v"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], cache["dec"]))
+    return (apply_norm(params["final_norm"], x, cfg),
+            {"dec": new_caches, "pos": pos + 1})

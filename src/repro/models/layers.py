@@ -1,0 +1,140 @@
+"""Shared layers: norms, rotary embeddings, MLP variants, embedding/head.
+
+Numerics follow production practice: bf16 params/activations with fp32
+norm statistics, fp32 softmax/logsumexp, fp32 rotary. The fused-RMSNorm
+Pallas kernel (repro.kernels.rmsnorm) is the TPU-target twin of
+``rmsnorm`` below; models call the pure-jnp version so the same code
+lowers on the TPU-less dry-run host (DESIGN §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """fp32 statistics, bf16 data path.
+
+    The activations are deliberately NOT upcast wholesale: converting the
+    full (B,S,D) residual to f32 lets XLA hoist the convert into the
+    layer-scan's saved carry (observed: an extra f32[L,B,S,D] stash,
+    +9.7 GB/device on qwen3 train_4k — EXPERIMENTS §Perf iteration 1).
+    Only the O(B·S) statistic is f32; the scale is cast back before the
+    multiply, keeping every saved tensor bf16."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return (x * inv) * (1.0 + w).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    """Same bf16-pure data path as rmsnorm (f32 statistics only, one-pass
+    moments so no f32 copy of x survives to the scan carry)."""
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    ex2 = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    var = jnp.maximum(ex2 - jnp.square(mu), 0.0)
+    y = (x - mu.astype(x.dtype)) * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def apply_norm(params: dict, x: jax.Array, cfg) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, params["w"], params["b"])
+    return rmsnorm(x, params["w"])
+
+
+def init_norm(cfg, d: int) -> dict:
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), cfg.dtype()), "b": jnp.zeros((d,), cfg.dtype())}
+    return {"w": jnp.zeros((d,), cfg.dtype())}  # '1+w' convention
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32. fp32 rotation."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg, d: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.dtype()
+    scale_in = d ** -0.5
+    scale_out = d_ff ** -0.5
+    if cfg.mlp_act == "sq_relu":
+        return {
+            "w_up": (jax.random.normal(k1, (d, d_ff)) * scale_in).astype(dt),
+            "w_down": (jax.random.normal(k3, (d_ff, d)) * scale_out).astype(dt),
+        }
+    return {
+        "w_gate": (jax.random.normal(k1, (d, d_ff)) * scale_in).astype(dt),
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * scale_in).astype(dt),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * scale_out).astype(dt),
+    }
+
+
+def mlp(params: dict, x: jax.Array, cfg) -> jax.Array:
+    if cfg.mlp_act == "sq_relu":
+        h = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        act = jax.nn.silu if cfg.mlp_act == "silu_glu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head — one-hot einsum so a vocab-sharded table partitions
+# without an all-gather (the production TPU pattern; DESIGN §5)
+# --------------------------------------------------------------------------
+def init_embed(key, cfg) -> dict:
+    dt = cfg.dtype()
+    p = {"table": (jax.random.normal(key, (cfg.vocab, cfg.d_model))
+                   * cfg.d_model ** -0.5).astype(dt)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["head"] = (jax.random.normal(k2, (cfg.vocab, cfg.d_model))
+                     * cfg.d_model ** -0.5).astype(dt)
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg) -> jax.Array:
+    """tokens (B, S) int32 → (B, S, D). one-hot@table partitions over a
+    vocab-sharded table with a psum instead of an all-gathered table.
+
+    The one-hot's vocab axis MUST be pinned to the TP axis: left to
+    propagation it stays unsharded and GSPMD all-gathers the full table
+    (9.4 GB bf16 for nemotron) and emits full-size (V, D) fp32 table
+    grads in backward (18.9 GB/device — EXPERIMENTS §Perf iteration 2)."""
+    from repro.sharding import ctx as shard_ctx
+    one_hot = jax.nn.one_hot(tokens, cfg.vocab, dtype=cfg.dtype("compute"))
+    one_hot = shard_ctx.constrain(one_hot, "dp", None, "tp")
+    return jnp.einsum("bsv,vd->bsd", one_hot, params["table"])
+
+
+def lm_logits(params: dict, x: jax.Array, cfg) -> jax.Array:
+    table = params["table"] if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,vd->bsv", x, table)

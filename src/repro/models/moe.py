@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k routing with per-chunk capacity
+(GShard-style dispatch/combine einsums — the GSPMD-partitionable form).
+
+Memory discipline (DESIGN §4): the dispatch tensor is the MoE analogue of
+the paper's "large intermediate buffer" — it is never materialized for
+the full sequence. The sequence is processed in ``cfg.moe_chunk`` chunks
+(a lax.scan), bounding the live dispatch tensor to
+(B, chunk, E, capacity) exactly like the paper bounds its working set to
+cache-sized tiles. Capacity is per (batch-row, chunk): tokens beyond an
+expert's capacity in a chunk are dropped (standard Switch semantics).
+
+Sharding: experts → 'model' when E divides the axis (granite, 32e), else
+the expert FFN hidden dim → 'model' (grok, 8e) — rules in sharding/rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dt),
+    }
+    if cfg.mlp_act != "sq_relu":
+        p["w_gate"] = (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dt)
+    return p
+
+
+def _capacity(cfg, chunk: int) -> int:
+    cap = int(chunk * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(cap, cfg.top_k)
+
+
+def _expert_ffn(p, x, cfg):
+    """x: (E, ..., D) → (E, ..., D), batched over the expert dim."""
+    if cfg.mlp_act == "sq_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("e...d,edf->e...f", x, p["w_up"])))
+    else:
+        g = jnp.einsum("e...d,edf->e...f", x, p["w_gate"])
+        u = jnp.einsum("e...d,edf->e...f", x, p["w_up"])
+        act = jax.nn.silu if cfg.mlp_act == "silu_glu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(g) * u
+    return jnp.einsum("e...f,efd->e...d", h, p["w_down"])
+
+
+def _moe_chunk(p, x, cfg):
+    """x: (B, C, D) one sequence chunk → (B, C, D), plus aux loss stats."""
+    b, c, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, c)
+
+    logits = jnp.einsum("bcd,de->bce", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)                   # (B, C, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position-in-expert within (batch-row, chunk): running count over (C, k)
+    oh = jax.nn.one_hot(ids, e, dtype=jnp.int32)               # (B, C, k, E)
+    flat = oh.reshape(b, c * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # tokens ahead
+    pos = jnp.sum(pos.reshape(b, c, k, e) * oh, axis=-1)       # (B, C, k)
+    keep = pos < cap
+
+    # dispatch/combine (B, C, E, cap) — the chunk-bounded buffer.
+    # slot[b,c,k,e,x] = 1 iff token (b,c) routes its k-th choice to expert e
+    # at capacity slot x (and survived the capacity cut).
+    slot = (oh[..., None].astype(cfg.dtype("compute"))          # (B,C,k,E,1)
+            * jax.nn.one_hot(pos, cap, dtype=cfg.dtype("compute"))[..., None, :])
+    slot = jnp.where(keep[..., None, None], slot, 0.0)          # (B,C,k,E,cap)
+    disp = jnp.sum(slot, axis=2)                                # (B,C,E,cap)
+    comb = jnp.sum(slot * gate_vals.astype(cfg.dtype("compute"))[..., None, None],
+                   axis=2)                                      # (B,C,E,cap)
+
+    xin = jnp.einsum("bcex,bcd->bexd", disp, x)                 # (B,E,cap,D)
+    xin = jnp.swapaxes(xin, 0, 1)                               # (E,B,cap,D)
+    out = _expert_ffn(p, xin, cfg)                             # (E,B,cap,D)
+    out = jnp.swapaxes(out, 0, 1)                              # (B,E,cap,D)
+    y = jnp.einsum("bcex,bexd->bcd", comb, out)
+
+    # load-balance aux loss (Switch): E * Σ_e fraction_e * prob_e
+    frac = jnp.mean(jnp.sum(oh[:, :, 0, :], axis=1).astype(jnp.float32)
+                    / c, axis=0)                               # top-1 fraction
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_prob)
+    return y, aux
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, D) → (B, S, D). Scans sequence chunks to bound dispatch
+    memory (paper's tiling rule)."""
+    b, s, d = x.shape
+    chunk = min(cfg.moe_chunk, s)
+    if s % chunk:
+        chunk = s                                   # smoke shapes
+    nc = s // chunk
+    if nc == 1:
+        y, aux = _moe_chunk(p, x, cfg)
+        return y, aux
+
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+
+    def body(_, xi):
+        y, aux = _moe_chunk(p, xi, cfg)
+        return None, (y, aux)
+
+    _, (yc, auxes) = jax.lax.scan(body, None, xc)
+    return jnp.moveaxis(yc, 0, 1).reshape(b, s, d), jnp.mean(auxes)

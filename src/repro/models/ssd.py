@@ -1,0 +1,188 @@
+"""Mamba-2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+DESIGN §Arch-applicability: SSD is the assigned arch where the paper's
+insight applies *directly* — the chunked SSD algorithm replaces a
+length-S sequential recurrence with cache/VMEM-sized blocked matmuls
+(intra-chunk, MXU-friendly) plus an O(S/Q) inter-chunk recurrence: the
+same "split into cache-sized portions and fuse" transformation the paper
+applies to centering.
+
+Chunked semantics (chunk length Q, fp32 state):
+  dA_t   = Δ_t · A                                   (per head, A < 0)
+  cs     = within-chunk cumsum of dA
+  intra:  Y_i += Σ_{j≤i}  (C_i·B_j) · e^{cs_i−cs_j} · Δ_j · x_j
+  state:  S_c  = Σ_j  e^{cs_Q−cs_j} · Δ_j · B_j ⊗ x_j
+  inter:  h_c  = e^{cs_Q} h_{c−1} + S_c;   Y_i += (C_i·h_{c−1}) · e^{cs_i}
+  out:    y = RMSNorm(Y ⊙ SiLU(z)) W_out + D ⊙ x
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+def init_ssd(key, cfg) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    w = cfg.conv_width
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 8)
+    conv_dim = di + 2 * g * n
+    # Δ bias: softplus(bias) ∈ [1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(ks[6], (nh,), minval=1e-3, maxval=1e-1)
+    dt_bias = jnp.log(jnp.expm1(u))
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, di)) * d ** -0.5).astype(dt),
+        "w_z": (jax.random.normal(ks[1], (d, di)) * d ** -0.5).astype(dt),
+        "w_b": (jax.random.normal(ks[2], (d, g * n)) * d ** -0.5).astype(dt),
+        "w_c": (jax.random.normal(ks[3], (d, g * n)) * d ** -0.5).astype(dt),
+        "w_dt": (jax.random.normal(ks[4], (d, nh)) * d ** -0.5).astype(dt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(jax.random.uniform(ks[7], (nh,), minval=1.0,
+                                            maxval=16.0)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (w, conv_dim))
+                   * w ** -0.5).astype(dt),
+        "norm_w": jnp.zeros((di,), dt),
+        "w_out": (jax.random.normal(jax.random.fold_in(key, 11), (di, d))
+                  * di ** -0.5).astype(dt),
+    }
+
+
+def _conv_split(p, x, cfg, conv_state=None):
+    """Shared projection + causal conv + split into (xh, B, C, z, dt)."""
+    from repro.models.rglru import causal_conv
+    di = cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    u = jnp.concatenate([
+        jnp.einsum("bsd,de->bse", x, p["w_x"]),
+        jnp.einsum("bsd,de->bse", x, p["w_b"]),
+        jnp.einsum("bsd,de->bse", x, p["w_c"]),
+    ], axis=-1)
+    u, conv_state = causal_conv(u, p["conv_w"], conv_state)
+    u = jax.nn.silu(u)
+    xh = u[..., :di]
+    b_ = u[..., di:di + g * n]
+    c_ = u[..., di + g * n:]
+    s = x.shape[1]
+    xh = xh.reshape(*xh.shape[:2], nh, cfg.ssm_headdim)
+    b_ = b_.reshape(*b_.shape[:2], g, n)
+    c_ = c_.reshape(*c_.shape[:2], g, n)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    return xh, b_, c_, z, dt, conv_state
+
+
+def ssd_forward(p, x, cfg, cache=None):
+    """Train/prefill. x: (B,S,D) → (out (B,S,D), cache)."""
+    bsz, s, d = x.shape
+    g, n, nh, hd = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    hpg = nh // g
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        q = s
+    nc = s // q
+
+    conv_state = cache["conv"] if cache else None
+    h0 = cache["h"] if cache else None
+    xh, b_, c_, z, dt, conv_state = _conv_split(p, x, cfg, conv_state)
+
+    a = -jnp.exp(p["a_log"])                        # (nh,) fp32, negative
+    da = dt * a                                     # (B,S,nh)
+
+    # chunk views
+    xc = xh.reshape(bsz, nc, q, g, hpg, hd).astype(jnp.float32)
+    bc = b_.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    cc = c_.reshape(bsz, nc, q, g, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, g, hpg)
+    dac = da.reshape(bsz, nc, q, g, hpg)
+    cs = jnp.cumsum(dac, axis=2)                    # (B,nc,Q,g,hpg)
+
+    # ---- intra-chunk (blocked matmuls — the MXU-friendly form) ----
+    scores = jnp.einsum("bzqgn,bzkgn->bzgqk", cc, bc)        # (B,nc,g,Q,Q)
+    decay = jnp.exp(cs[:, :, :, None] - cs[:, :, None])      # (B,nc,Q,Q,g,hpg)
+    causal = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    w_intra = jnp.where(causal[None, None, :, :, None, None], decay, 0.0)
+    w_intra = w_intra * dtc[:, :, None]                      # Δ_j at axis k
+    y = jnp.einsum("bzgqk,bzqkgh,bzkghd->bzqghd", scores, w_intra, xc)
+
+    # ---- chunk states ----
+    w_state = jnp.exp(cs[:, :, -1:, :, :] - cs) * dtc        # (B,nc,Q,g,hpg)
+    s_c = jnp.einsum("bzkgh,bzkgn,bzkghd->bzghnd", w_state, bc, xc)
+
+    # ---- inter-chunk recurrence over nc chunks ----
+    chunk_decay = jnp.exp(cs[:, :, -1])                      # (B,nc,g,hpg)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, g, hpg, n, hd), jnp.float32)
+    else:
+        h0 = h0.reshape(bsz, g, hpg, n, hd).astype(jnp.float32)
+
+    def step(h, args):
+        dec, sc = args
+        h_prev = h
+        h = h * dec[..., None, None] + sc
+        return h, h_prev
+
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_c, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (B,nc,g,hpg,N,hd)
+
+    y_inter = jnp.einsum("bzqgn,bzghnd->bzqghd", cc, h_prevs) \
+        * jnp.exp(cs)[..., None]
+    y = y + y_inter
+    y = y.reshape(bsz, s, nh, hd) + p["d_skip"][None, None, :, None] \
+        * xh.astype(jnp.float32)
+
+    # gated RMSNorm + out projection
+    y = y.reshape(bsz, s, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_cache = {"conv": conv_state,
+                 "h": h_last.reshape(bsz, nh, n, hd)}
+    return out, new_cache
+
+
+def init_ssd_cache(cfg, batch: int) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                          cfg.dtype("compute")),
+        "h": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state,
+                        cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def ssd_decode(p, x, cache, cfg):
+    """One decode step — O(1) state update. x: (B,1,D)."""
+    bsz = x.shape[0]
+    g, n, nh, hd = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    hpg = nh // g
+    xh, b_, c_, z, dt, conv_state = _conv_split(p, x, cfg, cache["conv"])
+
+    a = -jnp.exp(p["a_log"])
+    da = (dt * a)[:, 0]                                  # (B,nh)
+    h = cache["h"].astype(jnp.float32)                   # (B,nh,N,hd)
+    xf = xh[:, 0].astype(jnp.float32)                    # (B,nh,hd)
+    bf = b_[:, 0].astype(jnp.float32)                    # (B,g,N)
+    cf = c_[:, 0].astype(jnp.float32)
+    dtf = dt[:, 0]                                       # (B,nh)
+
+    # broadcast group-level B/C to head level (head h ↦ group h // hpg)
+    bh = jnp.repeat(bf, hpg, axis=1)                     # (B,nh,N)
+    ch = jnp.repeat(cf, hpg, axis=1)
+    h = h * jnp.exp(da)[..., None, None] \
+        + (dtf[..., None, None] * bh[..., None] * xf[:, :, None, :])
+    y = jnp.einsum("bhn,bhnd->bhd", ch, h) \
+        + p["d_skip"][None, :, None] * xf
+
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"conv": conv_state, "h": h}

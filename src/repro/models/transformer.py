@@ -1,0 +1,307 @@
+"""Decoder-only transformer assembly for all non-enc-dec archs.
+
+Layers are grouped into *pattern periods* (e.g. recurrentgemma's
+(rec, rec, local)) and scanned: params are stacked (n_periods, ...) so HLO
+size and compile time are depth-independent; remainder layers (when the
+pattern does not divide n_layers) run unrolled after the scan.
+
+Three entry points with identical signatures across block types:
+  forward_train  — full-sequence causal forward → final hidden states
+  prefill        — forward + cache construction (inference)
+  decode_step    — one token through all layers against the cache
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rec_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import (apply_norm, embed_tokens, init_embed,
+                                 init_mlp, init_norm, mlp)
+from repro.sharding import ctx as shard_ctx
+
+
+# --------------------------------------------------------------------------
+# per-block init / forward / prefill / decode
+# --------------------------------------------------------------------------
+def init_block(key, cfg, btype: str) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    if btype in ("attn", "local"):
+        return {"ln1": init_norm(cfg, d), "attn": attn_mod.init_attn(ks[0], cfg),
+                "ln2": init_norm(cfg, d), "mlp": init_mlp(ks[1], cfg, d, cfg.d_ff)}
+    if btype == "moe":
+        return {"ln1": init_norm(cfg, d), "attn": attn_mod.init_attn(ks[0], cfg),
+                "ln2": init_norm(cfg, d), "moe": moe_mod.init_moe(ks[1], cfg)}
+    if btype == "rec":
+        return {"ln1": init_norm(cfg, d), "rec": rec_mod.init_rec(ks[0], cfg),
+                "ln2": init_norm(cfg, d), "mlp": init_mlp(ks[1], cfg, d, cfg.d_ff)}
+    if btype == "ssd":
+        return {"ln": init_norm(cfg, d), "ssd": ssd_mod.init_ssd(ks[0], cfg)}
+    raise ValueError(f"unknown block type {btype!r}")
+
+
+def block_forward(p, x, positions, cfg, btype: str):
+    """→ (x, aux_loss)."""
+    if btype in ("attn", "local"):
+        window = cfg.window if btype == "local" else 0
+        h, _ = attn_mod.attn_forward(p["attn"], apply_norm(p["ln1"], x, cfg),
+                                     positions, cfg, window=window)
+        x = x + h
+        x = x + mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x, jnp.zeros((), jnp.float32)
+    if btype == "moe":
+        h, _ = attn_mod.attn_forward(p["attn"], apply_norm(p["ln1"], x, cfg),
+                                     positions, cfg)
+        x = x + h
+        h, aux = moe_mod.moe_ffn(p["moe"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x + h, aux
+    if btype == "rec":
+        h, _ = rec_mod.rec_forward(p["rec"], apply_norm(p["ln1"], x, cfg), cfg)
+        x = x + h
+        x = x + mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x, jnp.zeros((), jnp.float32)
+    if btype == "ssd":
+        h, _ = ssd_mod.ssd_forward(p["ssd"], apply_norm(p["ln"], x, cfg), cfg)
+        return x + h, jnp.zeros((), jnp.float32)
+    raise ValueError(btype)
+
+
+def init_block_cache(cfg, btype: str, batch: int, max_len: int):
+    if btype == "attn":
+        return attn_mod.init_attn_cache(cfg, batch, max_len)
+    if btype == "local":
+        return attn_mod.init_attn_cache(cfg, batch, max_len, window=cfg.window)
+    if btype == "moe":
+        return attn_mod.init_attn_cache(cfg, batch, max_len)
+    if btype == "rec":
+        return rec_mod.init_rec_cache(cfg, batch)
+    if btype == "ssd":
+        return ssd_mod.init_ssd_cache(cfg, batch)
+    raise ValueError(btype)
+
+
+def block_prefill(p, x, positions, cfg, btype: str, max_len: int):
+    """→ (x, cache). Like forward but keeps the inference cache."""
+    if btype in ("attn", "local", "moe"):
+        window = cfg.window if btype == "local" else 0
+        norm_x = apply_norm(p["ln1"], x, cfg)
+        h, (k, v) = attn_mod.attn_forward(p["attn"], norm_x, positions, cfg,
+                                          window=window)
+        x = x + h
+        cache = attn_mod.init_attn_cache(cfg, x.shape[0], max_len,
+                                         window=window)
+        cache = attn_mod.fill_cache_from_prefill(cache, k, v, window=window)
+        if btype == "moe":
+            h, _ = moe_mod.moe_ffn(p["moe"], apply_norm(p["ln2"], x, cfg), cfg)
+        else:
+            h = mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x + h, cache
+    if btype == "rec":
+        h, (conv, h_last) = rec_mod.rec_forward(
+            p["rec"], apply_norm(p["ln1"], x, cfg), cfg)
+        x = x + h
+        x = x + mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x, {"conv": conv, "h": h_last}
+    if btype == "ssd":
+        h, cache = ssd_mod.ssd_forward(p["ssd"], apply_norm(p["ln"], x, cfg),
+                                       cfg)
+        return x + h, cache
+    raise ValueError(btype)
+
+
+def block_decode(p, x, cache, pos, cfg, btype: str):
+    """→ (x, new_cache). x: (B, 1, D)."""
+    if btype in ("attn", "local", "moe"):
+        window = cfg.window if btype == "local" else 0
+        h, cache = attn_mod.attn_decode(p["attn"], apply_norm(p["ln1"], x, cfg),
+                                        cache, pos, cfg, window=window)
+        x = x + h
+        if btype == "moe":
+            h, _ = moe_mod.moe_ffn(p["moe"], apply_norm(p["ln2"], x, cfg), cfg)
+        else:
+            h = mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x + h, cache
+    if btype == "rec":
+        h, cache = rec_mod.rec_decode(p["rec"], apply_norm(p["ln1"], x, cfg),
+                                      cache, cfg)
+        x = x + h
+        x = x + mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+        return x, cache
+    if btype == "ssd":
+        h, cache = ssd_mod.ssd_decode(p["ssd"], apply_norm(p["ln"], x, cfg),
+                                      cache, cfg)
+        return x + h, cache
+    raise ValueError(btype)
+
+
+# --------------------------------------------------------------------------
+# stack layout: scanned periods + unrolled remainder
+# --------------------------------------------------------------------------
+def _layout(cfg):
+    period = len(cfg.pattern)
+    n_full = cfg.n_layers // period
+    rem = cfg.pattern[: cfg.n_layers % period]
+    return period, n_full, rem
+
+
+def init_params(key, cfg) -> dict:
+    """Full parameter pytree. Scanned block params are stacked (n_full, ...)."""
+    period, n_full, rem = _layout(cfg)
+    keys = jax.random.split(key, 4)
+
+    def stack_one(pos):
+        ks = jax.random.split(jax.random.fold_in(keys[0], pos), n_full)
+        return jax.vmap(lambda k: init_block(k, cfg, cfg.pattern[pos]))(ks)
+
+    params = {
+        "embed": init_embed(keys[1], cfg),
+        "blocks": tuple(stack_one(i) for i in range(period)),
+        "rem": tuple(init_block(jax.random.fold_in(keys[2], i), cfg, t)
+                     for i, t in enumerate(rem)),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if cfg.frontend != "none":
+        params["frontend"] = {
+            "proj": (jax.random.normal(keys[3], (cfg.frontend_dim, cfg.d_model))
+                     * cfg.frontend_dim ** -0.5).astype(cfg.dtype())}
+    return params
+
+
+def _embed_inputs(params, tokens, cfg, extra_embeds):
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.frontend != "none" and extra_embeds is not None:
+        patches = jnp.einsum("bpf,fd->bpd",
+                             extra_embeds.astype(cfg.dtype("compute")),
+                             params["frontend"]["proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def forward_train(params, tokens, cfg, extra_embeds=None):
+    """→ (hidden (B,S,D), aux_loss). Loss/logits live in runtime (vocab-
+    sharded logits are computed against the embedding there)."""
+    x = _embed_inputs(params, tokens, cfg, extra_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 x.shape[:2])
+    period, n_full, rem = _layout(cfg)
+
+    seq_dim = 1 if cfg.seq_shard_activations else None
+
+    def body(carry, layer_params):
+        x, aux = carry
+        # pin batch (and, under SP, the seq axis) on the residual stream:
+        # the scan-saved carry inherits this sharding → 16× stash cut
+        x = shard_ctx.constrain_batch(x, seq_dim=seq_dim)
+        for btype, bp in zip(cfg.pattern, layer_params):
+            x, a = block_forward(bp, x, positions, cfg, btype)
+            aux = aux + a
+        return (x, aux), None
+
+    if n_full:
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg),
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    for btype, bp in zip(rem, params["rem"]):
+        x, a = block_forward(bp, x, positions, cfg, btype)
+        aux = aux + a
+    x = shard_ctx.constrain_batch(x)
+    return apply_norm(params["final_norm"], x, cfg), aux
+
+
+def prefill(params, tokens, cfg, extra_embeds=None, max_len: Optional[int] = None):
+    """→ (hidden, cache). max_len: cache capacity (≥ prompt length)."""
+    x = _embed_inputs(params, tokens, cfg, extra_embeds)
+    max_len = max_len or x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 x.shape[:2])
+    period, n_full, rem = _layout(cfg)
+
+    def body(x, layer_params):
+        x = shard_ctx.constrain_batch(x)
+        caches = []
+        for btype, bp in zip(cfg.pattern, layer_params):
+            x, c = block_prefill(bp, x, positions, cfg, btype, max_len)
+            caches.append(c)
+        return x, tuple(caches)
+
+    if n_full:
+        x, scan_caches = jax.lax.scan(body, x, params["blocks"])
+    else:
+        scan_caches = ()
+    rem_caches = []
+    for btype, bp in zip(rem, params["rem"]):
+        x, c = block_prefill(bp, x, positions, cfg, btype, max_len)
+        rem_caches.append(c)
+    cache = {"blocks": scan_caches, "rem": tuple(rem_caches),
+             "pos": jnp.asarray(x.shape[1], jnp.int32)}
+    return apply_norm(params["final_norm"], x, cfg), cache
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    """Empty cache (decode-from-scratch, or shape/sharding template)."""
+    period, n_full, rem = _layout(cfg)
+
+    def stacked(pos):
+        return jax.vmap(
+            lambda _: init_block_cache(cfg, cfg.pattern[pos], batch, max_len)
+        )(jnp.arange(n_full))
+
+    return {"blocks": tuple(stacked(i) for i in range(period)) if n_full else (),
+            "rem": tuple(init_block_cache(cfg, t, batch, max_len) for t in rem),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg):
+    """token: (B, 1) int32 → (hidden (B,1,D), new_cache)."""
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], token, cfg)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    period, n_full, rem = _layout(cfg)
+
+    def body(x, args):
+        layer_params, layer_cache = args
+        x = shard_ctx.constrain_batch(x)
+        # barrier: stops XLA from hoisting per-layer dtype converts of the
+        # cache out of the scan (the CPU backend emulates bf16 dots in f32
+        # and would otherwise materialize the WHOLE stacked cache in f32 —
+        # 2× HBM; a host-compile artifact, absent on real TPUs, but the
+        # barrier keeps the dry-run memory model honest either way)
+        layer_cache = jax.lax.optimization_barrier(layer_cache)
+        new_caches = []
+        for btype, bp, c in zip(cfg.pattern, layer_params, layer_cache):
+            x, nc = block_decode(bp, x, c, pos, cfg, btype)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if n_full:
+        x, scan_caches = jax.lax.scan(body, x,
+                                      (params["blocks"], cache["blocks"]))
+    else:
+        scan_caches = ()
+    rem_caches = []
+    for btype, bp, c in zip(rem, params["rem"], cache["rem"]):
+        x, nc = block_decode(bp, x, c, pos, cfg, btype)
+        rem_caches.append(nc)
+    new_cache = {"blocks": scan_caches, "rem": tuple(rem_caches),
+                 "pos": pos + 1}
+    return apply_norm(params["final_norm"], x, cfg), new_cache

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, init_opt_state, adamw_update, lr_schedule
+from repro.optim.compression import (quantize_int8, dequantize_int8,
+                                     compressed_psum, init_error_state)
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "lr_schedule",
+           "quantize_int8", "dequantize_int8", "compressed_psum",
+           "init_error_state"]

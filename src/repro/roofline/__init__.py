@@ -1,0 +1,6 @@
+from repro.roofline.hlo import collective_bytes_per_device, parse_hlo_collectives
+from repro.roofline.model import step_costs
+from repro.roofline.terms import roofline_terms
+
+__all__ = ["collective_bytes_per_device", "parse_hlo_collectives",
+           "step_costs", "roofline_terms"]

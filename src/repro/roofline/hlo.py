@@ -1,0 +1,228 @@
+"""HLO-text collective parser with while-loop trip-count correction.
+
+The harness asks for collective bytes parsed from the compiled HLO.
+One methodological trap (verified empirically, EXPERIMENTS.md §Method):
+XLA's ``cost_analysis()`` and a naive text scan both count a while-loop
+body ONCE — but our layer stacks are ``lax.scan``s, so a 96-layer model's
+collectives would be undercounted 96×. This parser:
+
+1. splits the HLO module into computations,
+2. finds every collective op and computes its *wire bytes per device*
+   with the standard ring formulas (group size ``g`` from replica_groups):
+       all-reduce         2·(g−1)/g · bytes      (ring reduce + broadcast)
+       all-gather         (g−1)/g · out_bytes
+       reduce-scatter     (g−1)/g · in_bytes
+       all-to-all         (g−1)/g · bytes
+       collective-permute bytes
+3. walks the call graph (while/call/conditional/fusion) multiplying by
+   while trip counts extracted from the loop condition's comparison
+   constant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array shape in a (possibly tuple) type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_wire: int          # per-device wire bytes (ring formulas)
+    bytes_payload: int       # raw operand/output bytes
+    group_size: int
+    computation: str
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$",
+                     stripped)
+        # computation header lines look like: "%name (args) -> type {"
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m2 = re.search(r"%?([\w\.\-]+)\s*\(", stripped)
+            cur = m2.group(1) if m2 else f"anon{len(comps)}"
+            comps[cur] = []
+        elif stripped.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota format [g,n]
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+def _wire_bytes(kind: str, out_bytes: int, in_bytes: int, g: int) -> int:
+    if g <= 1:
+        return 0
+    if kind == "all-reduce":
+        return int(2 * (g - 1) / g * out_bytes)
+    if kind == "all-gather":
+        return int((g - 1) / g * out_bytes)
+    if kind == "reduce-scatter":
+        return int((g - 1) / g * in_bytes if in_bytes else (g - 1) * out_bytes)
+    if kind == "all-to-all":
+        return int((g - 1) / g * out_bytes)
+    if kind == "collective-permute":
+        return out_bytes
+    return out_bytes
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Extract the while trip count from its condition computation:
+    jax emits `compare(iter, constant(N)), direction=LT`."""
+    consts = []
+    for ln in cond_lines:
+        if "constant(" in ln and ("s32" in ln or "s64" in ln or "u32" in ln):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def parse_hlo_collectives(hlo: str, total_devices: int
+                          ) -> Tuple[List[CollectiveOp], Dict[str, int]]:
+    """→ (flat collective list with per-execution wire bytes,
+          {computation: trip multiplier from the call graph})."""
+    comps = _split_computations(hlo)
+
+    # call graph: computation → [(callee, multiplier)]
+    calls: Dict[str, List[Tuple[str, str]]] = {c: [] for c in comps}
+    whiles: Dict[str, Tuple[str, str]] = {}
+    trip_hints: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            wm = re.search(r"\bwhile\(.*?condition=%?([\w\.\-]+),\s*"
+                           r"body=%?([\w\.\-]+)", ln)
+            if wm:
+                body = wm.group(2)
+                calls[cname].append(("while", body))
+                whiles[body] = (cname, wm.group(1))
+                # XLA annotates the trip count when it can prove it
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+                if tm:
+                    trip_hints[body] = int(tm.group(1))
+                continue
+            for cm in re.finditer(r"(?:calls|to_apply|body|branch_computations)"
+                                  r"=%?\{?([\w\.\-,\s%]+)\}?", ln):
+                for callee in re.split(r"[,\s]+", cm.group(1)):
+                    callee = callee.strip().lstrip("%")
+                    if callee in comps and callee != cname:
+                        calls[cname].append(("call", callee))
+
+    # multiplier per computation, walking down from ENTRY-ish roots
+    called = {c for lst in calls.values() for _, c in lst}
+    roots = [c for c in comps if c not in called]
+    mult: Dict[str, int] = {c: 0 for c in comps}
+
+    def visit(c: str, m: int):
+        if m <= 0 or c not in comps:
+            return
+        mult[c] = mult.get(c, 0) + m
+        for kind, callee in calls.get(c, []):
+            if kind == "while":
+                body = callee
+                cond = whiles.get(body, (None, None))[1]
+                tc = trip_hints.get(body) or (
+                    _trip_count(comps.get(cond, [])) if cond else 1)
+                visit(body, m * tc)
+                if cond:
+                    visit(cond, m)   # negligible, but keep graph complete
+            else:
+                visit(callee, m)
+
+    for r in roots:
+        visit(r, 1)
+
+    ops: List[CollectiveOp] = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1) or 1
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                # match "= TYPE kind(" and async "kind-start("
+                if re.search(rf"=\s*[^=]*\s{kind}(?:-start)?\(", ln):
+                    out_b = _shape_bytes(ln.split("=", 1)[1].split(kind)[0])
+                    g = _group_size(ln, total_devices)
+                    wire = _wire_bytes(kind, out_b, out_b, g)
+                    for _ in range(m):
+                        ops.append(CollectiveOp(kind, wire, out_b, g, cname))
+                    break
+    return ops, mult
+
+
+def collective_bytes_per_device(hlo: str, total_devices: int) -> dict:
+    """Aggregate wire bytes per device by collective kind (+ 'total')."""
+    ops, _ = parse_hlo_collectives(hlo, total_devices)
+    out = {}
+    for op in ops:
+        out[op.kind] = out.get(op.kind, 0) + op.bytes_wire
+    out["total"] = sum(out.values())
+    out["count"] = len(ops)
+    return out
+
+
+# --------------------------------------------------------------------------
+# CPU-backend bf16-emulation artifact detection (EXPERIMENTS §Method Trap 3)
+# --------------------------------------------------------------------------
+_TUPLE_ITEM = re.compile(r"(\w+)\[([\d,]+)\]")
+
+
+def cpu_bf16_carry_artifact_bytes(hlo: str) -> int:
+    """The CPU backend emulates bf16 dots in f32; for decode steps XLA then
+    carries an f32 COPY of the bf16 KV cache through the layer-scan while
+    loop (verified by inspecting the while tuple). On TPU the MXU consumes
+    bf16 natively and the copy does not exist. This detects f32 while-carry
+    entries that shadow an identically-shaped bf16 entry in the same tuple
+    and returns their total bytes — subtract from the temp size to get the
+    TPU-faithful peak ('peak_adjusted' in the dry-run records)."""
+    total = 0
+    for line in hlo.splitlines():
+        if "= (" not in line or " while(" not in line:
+            continue
+        sig = line.split("= (", 1)[1].split(") while(", 1)[0]
+        items = _TUPLE_ITEM.findall(sig)
+        bf16_shapes = {dims for dt, dims in items if dt == "bf16"}
+        for dt, dims in items:
+            if dt == "f32" and dims in bf16_shapes and dims:
+                n = 1
+                for d in dims.split(","):
+                    n *= int(d)
+                if n * 4 > 1e8:          # only cache-scale duplicates
+                    total += n * 4
+    return total

@@ -1,0 +1,302 @@
+"""Analytic per-step FLOP/byte model — exact for the einsums this codebase
+emits (EXPERIMENTS.md §Method documents why this exists: XLA's
+``cost_analysis()`` counts ``lax.scan`` bodies once, undercounting a
+96-layer stack 96×; we therefore derive compute/memory terms analytically
+and keep cost_analysis as a reported cross-check).
+
+Conventions:
+
+* FLOPs are *executed* FLOPs (including causal-mask waste in chunked
+  prefill attention, MoE capacity padding, remat recompute, the one-hot
+  embedding matmul) — the honest numerator for "how busy is the MXU".
+* ``model_flops`` is the *useful* floor: 6·N_active·tokens for training,
+  2·N_active·tokens for inference (+ exact useful attention), so
+  executed/useful exposes redundancy (remat, mask waste, dispatch).
+* Bytes are per-device HBM traffic with an explicit inventory
+  (weights×uses via FSDP all-gather, activation tensors ×(fwd, remat,
+  bwd), optimizer state, KV cache reads) — napkin math, stated not
+  hidden.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class StepCost:
+    flops_executed: float          # whole-step, all devices
+    flops_model: float             # useful floor
+    bytes_hbm_per_device: float
+    params_total: float
+    breakdown: Dict[str, float]
+
+
+def _dtype_bytes(name: str) -> int:
+    return {"bfloat16": 2, "float32": 4, "float16": 2}[name]
+
+
+# --------------------------------------------------------------------------
+# per-layer forward matmul FLOPs per token (×2 mult-add inside)
+# --------------------------------------------------------------------------
+def _attn_proj_flops(cfg) -> float:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return 2 * d * hd * (h + 2 * k) + 2 * h * hd * d
+
+
+def _attn_score_flops(cfg, s_kv: float) -> float:
+    """per token: QKᵀ + AV over s_kv keys."""
+    return 4 * s_kv * cfg.n_heads * cfg.head_dim
+
+
+def _mlp_flops(cfg) -> float:
+    n_mats = 2 if cfg.mlp_act == "sq_relu" else 3
+    return 2 * n_mats * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops(cfg) -> float:
+    n_mats = 2 if cfg.mlp_act == "sq_relu" else 3
+    expert = 2 * n_mats * cfg.d_model * cfg.d_ff
+    executed = cfg.top_k * cfg.capacity_factor * expert       # capacity pad
+    dispatch = 4 * cfg.top_k * cfg.capacity_factor * cfg.d_model  # disp+comb
+    router = 2 * cfg.d_model * cfg.n_experts
+    return executed + dispatch + router
+
+
+def _moe_useful_flops(cfg) -> float:
+    n_mats = 2 if cfg.mlp_act == "sq_relu" else 3
+    return cfg.top_k * 2 * n_mats * cfg.d_model * cfg.d_ff
+
+
+def _rec_flops(cfg) -> float:
+    d, r = cfg.d_model, cfg.lru_width_actual
+    return (2 * d * r * 2        # two branches
+            + 2 * r * d          # out proj
+            + 2 * r * r * 2      # dense gates (W_a, W_x)
+            + 2 * cfg.conv_width * r
+            + 12 * r)            # scan elementwise
+
+
+def _ssd_flops(cfg) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh, hd = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    q = cfg.ssm_chunk
+    proj = 2 * d * (2 * di + 2 * g * n + nh) + 2 * di * d
+    conv = 2 * cfg.conv_width * (di + 2 * g * n)
+    intra = 2 * q * g * n + 2 * q * nh * hd + 3 * q * nh   # scores, apply, decay
+    state = 4 * nh * hd * n                                 # build + inter emit
+    return proj + conv + intra + state
+
+
+def _ssd_decode_flops(cfg) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh, hd = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    proj = 2 * d * (2 * di + 2 * g * n + nh) + 2 * di * d
+    return proj + 6 * nh * hd * n
+
+
+def _layer_flops_fwd(cfg, btype: str, s_kv: float, kind: str) -> float:
+    """per-token executed forward FLOPs of one layer."""
+    if btype in ("attn", "moe"):
+        core = _attn_proj_flops(cfg) + _attn_score_flops(cfg, s_kv)
+        return core + (_moe_flops(cfg) if btype == "moe" else _mlp_flops(cfg))
+    if btype == "local":
+        w_eff = min(cfg.window * (2 if kind == "prefill" else 1), s_kv)
+        return _attn_proj_flops(cfg) + _attn_score_flops(cfg, w_eff) \
+            + _mlp_flops(cfg)
+    if btype == "rec":
+        return _rec_flops(cfg) + _mlp_flops(cfg)
+    if btype == "ssd":
+        return (_ssd_decode_flops(cfg) if kind == "decode"
+                else _ssd_flops(cfg))
+    raise ValueError(btype)
+
+
+def _layer_flops_useful(cfg, btype: str, s_kv_exact: float) -> float:
+    """useful = 2×active-params matmuls + exact causal attention."""
+    if btype in ("attn", "moe"):
+        core = _attn_proj_flops(cfg) + _attn_score_flops(cfg, s_kv_exact)
+        return core + (_moe_useful_flops(cfg) if btype == "moe"
+                       else _mlp_flops(cfg))
+    if btype == "local":
+        return (_attn_proj_flops(cfg)
+                + _attn_score_flops(cfg, min(cfg.window, s_kv_exact))
+                + _mlp_flops(cfg))
+    if btype == "rec":
+        return _rec_flops(cfg) + _mlp_flops(cfg)
+    if btype == "ssd":
+        return _ssd_flops(cfg)
+    raise ValueError(btype)
+
+
+# --------------------------------------------------------------------------
+# activation-byte inventory per layer per token (forward, one pass)
+# --------------------------------------------------------------------------
+def _layer_act_bytes(cfg, btype: str, kind: str) -> float:
+    """Major activation tensors written+read once in forward (bytes/token).
+    Chunk-transient score tensors are excluded (they live in VMEM-scale
+    chunks by construction — the paper's fused-pass assumption)."""
+    b = _dtype_bytes(cfg.compute_dtype)
+    d, hd = cfg.d_model, cfg.head_dim
+    if btype in ("attn", "local", "moe"):
+        qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd * b
+        ffn_h = (cfg.d_ff if btype != "moe"
+                 else cfg.top_k * cfg.capacity_factor * cfg.d_ff) * b
+        glu = 2 if cfg.mlp_act != "sq_relu" else 1
+        return 4 * d * b + qkv + glu * ffn_h
+    if btype == "rec":
+        r = cfg.lru_width_actual
+        return 4 * d * b + 5 * r * b + 2 * cfg.d_ff * b
+    if btype == "ssd":
+        di = cfg.d_inner
+        return (3 * d * b + (2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state) * b
+                + 4 * cfg.ssm_nheads)   # dt etc. fp32-ish, minor
+    raise ValueError(btype)
+
+
+# --------------------------------------------------------------------------
+# whole-step costs
+# --------------------------------------------------------------------------
+def step_costs(cfg: ModelConfig, shape: ShapeConfig, n_chips: int) -> StepCost:
+    pb = _dtype_bytes(cfg.param_dtype)
+    ob = _dtype_bytes(cfg.opt_dtype)
+    n_params = cfg.param_count()
+    layer_types = cfg.layer_types()
+    d, v = cfg.d_model, cfg.vocab
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        s_kv = shape.seq_len   # full masked attention at 4k (executed = S)
+        s_useful = (shape.seq_len + 1) / 2
+        fwd = sum(_layer_flops_fwd(cfg, t, s_kv, "train")
+                  for t in layer_types)
+        if cfg.is_encdec:
+            enc_tokens = shape.global_batch * (shape.seq_len
+                                               // cfg.enc_len_ratio)
+            enc_fwd = cfg.n_enc_layers * (_attn_proj_flops(cfg)
+                                          + _attn_score_flops(
+                                              cfg, shape.seq_len
+                                              // cfg.enc_len_ratio)
+                                          + _mlp_flops(cfg))
+            cross = cfg.n_layers * (_attn_proj_flops(cfg)
+                                    + _attn_score_flops(
+                                        cfg, shape.seq_len
+                                        // cfg.enc_len_ratio))
+            fwd_total_tok = fwd * tokens + (enc_fwd * enc_tokens
+                                            + cross * tokens)
+        else:
+            fwd_total_tok = fwd * tokens
+        embed_head = (2 * v * d) * 2 + 2 * v        # one-hot embed + head + loss
+        # fwd(1) + remat-fwd(1) + bwd(2) for layers; embed/head: fwd+bwd (3×)
+        remat_mult = {"full": 4.0, "dots": 3.5, "none": 3.0}[cfg.remat]
+        flops_exec = fwd_total_tok * remat_mult + embed_head * tokens * 3.0
+
+        n_active = cfg.active_param_count()
+        useful_attn = sum(
+            _attn_score_flops(cfg, s_useful) for t in layer_types
+            if t in ("attn", "moe")) + sum(
+            _attn_score_flops(cfg, min(cfg.window, s_useful))
+            for t in layer_types if t == "local")
+        flops_model = (6 * n_active + 3 * useful_attn) * tokens
+
+        # ---- bytes per device ----
+        micro = cfg.microbatches
+        # weights: all-gathered per microbatch per pass (fwd, remat, bwd)
+        w_traffic = n_params * pb * 3 * micro
+        act = sum(_layer_act_bytes(cfg, t, "train") for t in layer_types)
+        act_traffic = act * tokens / n_chips * 4       # fwd+remat+bwd(2)
+        logits_traffic = tokens * v * 2 / n_chips * 2  # bf16 logits fwd+bwd
+        opt_traffic = (n_params / n_chips) * (4 * ob + 2 * pb + 4)
+        bytes_dev = (w_traffic + act_traffic + logits_traffic + opt_traffic)
+
+        return StepCost(flops_exec, flops_model, bytes_dev, n_params, {
+            "fwd_layer_flops_per_tok": fwd,
+            "weights_bytes": w_traffic,
+            "act_bytes": act_traffic,
+            "logits_bytes": logits_traffic,
+            "opt_bytes": opt_traffic,
+        })
+
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        # chunked causal attention executes the full rectangle (waste 2×)
+        fwd = sum(_layer_flops_fwd(cfg, t, shape.seq_len, "prefill")
+                  for t in layer_types)
+        if cfg.is_encdec:
+            enc_len = shape.seq_len // cfg.enc_len_ratio
+            enc_tokens = shape.global_batch * enc_len
+            fwd_total = (fwd * tokens
+                         + cfg.n_enc_layers * (_attn_proj_flops(cfg)
+                                               + _attn_score_flops(cfg, enc_len)
+                                               + _mlp_flops(cfg)) * enc_tokens
+                         + cfg.n_layers * (_attn_proj_flops(cfg)
+                                           + _attn_score_flops(cfg, enc_len))
+                         * tokens)
+        else:
+            fwd_total = fwd * tokens
+        embed_head = 2 * v * d * tokens + 2 * v * d * shape.global_batch
+        flops_exec = fwd_total + embed_head
+
+        n_active = cfg.active_param_count()
+        s_useful = (shape.seq_len + 1) / 2
+        useful_attn = sum(
+            _attn_score_flops(cfg, s_useful) for t in layer_types
+            if t in ("attn", "moe")) + sum(
+            _attn_score_flops(cfg, min(cfg.window, s_useful))
+            for t in layer_types if t == "local")
+        flops_model = (2 * n_active + useful_attn) * tokens
+
+        act = sum(_layer_act_bytes(cfg, t, "prefill") for t in layer_types)
+        cb = _dtype_bytes(cfg.compute_dtype)
+        kv_write = sum(2 * cfg.n_kv_heads * cfg.head_dim * cb
+                       for t in layer_types if t in ("attn", "moe", "local"))
+        bytes_dev = (n_params * pb
+                     + (act + kv_write) * tokens / n_chips
+                     + 2 * v * d * pb)      # head read
+        return StepCost(flops_exec, flops_model, bytes_dev, n_params, {
+            "kv_write_bytes": kv_write * tokens / n_chips})
+
+    # ---- decode: one token, cache depth = seq_len ----
+    bsz = shape.global_batch
+    cb = _dtype_bytes(cfg.compute_dtype)
+    fwd = sum(_layer_flops_fwd(cfg, t, shape.seq_len, "decode")
+              for t in layer_types)
+    if cfg.is_encdec:
+        enc_len = shape.seq_len // cfg.enc_len_ratio
+        fwd += cfg.n_layers * (_attn_proj_flops(cfg)
+                               + _attn_score_flops(cfg, enc_len))
+    embed_head = 2 * v * d * 2
+    flops_exec = (fwd + embed_head) * bsz
+    flops_model = flops_exec                     # decode executes ~exactly
+    # bytes: whole active params + the KV cache slice per token
+    # int8 KV quantization: 1 byte/element + f32 scale per (t, head)
+    kv_b = 1 if cfg.kv_quant else cb
+    kv_scale = (4.0 / cfg.head_dim) if cfg.kv_quant else 0.0
+    cache_bytes = 0.0
+    for t in cfg.layer_types():
+        if t in ("attn", "moe"):
+            cache_bytes += 2 * shape.seq_len * cfg.n_kv_heads * cfg.head_dim \
+                * (kv_b + kv_scale)
+        elif t == "local":
+            cache_bytes += 2 * min(cfg.window, shape.seq_len) \
+                * cfg.n_kv_heads * cfg.head_dim * (kv_b + kv_scale)
+        elif t == "rec":
+            cache_bytes += cfg.lru_width_actual * (4 + cb * (cfg.conv_width - 1))
+        elif t == "ssd":
+            cache_bytes += (cfg.ssm_nheads * cfg.ssm_state * cfg.ssm_headdim * 4
+                            + (cfg.d_inner + 2 * cfg.ssm_ngroups
+                               * cfg.ssm_state) * cb * (cfg.conv_width - 1))
+    if cfg.is_encdec:
+        enc_len = shape.seq_len // cfg.enc_len_ratio
+        cache_bytes += cfg.n_layers * (2 * shape.seq_len + 2 * enc_len) \
+            * cfg.n_kv_heads * cfg.head_dim * cb
+        cache_bytes -= sum(2 * shape.seq_len * cfg.n_kv_heads * cfg.head_dim
+                           * cb for t in cfg.layer_types())
+    params_active = cfg.active_param_count()
+    # decode reads every active weight shard once and the cache shard once
+    bytes_dev = (params_active * pb + cache_bytes * bsz) / n_chips
+    return StepCost(flops_exec, flops_model, bytes_dev, n_params, {
+        "cache_bytes_total": cache_bytes * bsz})

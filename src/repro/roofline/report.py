@@ -1,0 +1,125 @@
+"""Render the dry-run JSON results into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.roofline.report [--results results/]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def load(results_dir: str):
+    out = {}
+    for name in sorted(os.listdir(results_dir)):
+        if name.startswith("dryrun_") and name.endswith(".json"):
+            with open(os.path.join(results_dir, name)) as f:
+                out[name[len("dryrun_"):-len(".json")]] = json.load(f)
+    return out
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b / 1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.0f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def roofline_table(cells: dict, mesh_name: str) -> str:
+    rows = []
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| model/exec | mfu_bound | fit(GB) |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for key in sorted(cells):
+        r = cells[key]
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                        f"{r['error'][:60]} | | | | | | |")
+            continue
+        t = r["roofline"]
+        ma = r["memory_analysis"]
+        peak = ma.get("peak_adjusted_bytes_per_device",
+                      ma["argument_bytes_per_device"]
+                      + ma["temp_bytes_per_device"]) / 1e9
+        fit = "✓" if peak < HBM_PER_CHIP / 1e9 else "✗"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} "
+            f"| {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+            f"| **{t['dominant']}** | {t['useful_ratio']:.2f} "
+            f"| {t['mfu_bound']:.3f} | {peak:.1f} {fit} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: dict) -> str:
+    rows = ["| arch | shape | params | arg B/dev | temp B/dev | collectives "
+            "(wire B/dev) | #coll ops | compile_s |",
+            "|" + "---|" * 8]
+    for key in sorted(cells):
+        r = cells[key]
+        if "error" in r:
+            continue
+        ma = r["memory_analysis"]
+        co = r["collectives"]
+        kinds = ", ".join(f"{k}:{fmt_bytes(v)}" for k, v in sorted(co.items())
+                          if k not in ("total", "count") and v > 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['analytic']['params_total'] / 1e9:.1f}B "
+            f"| {fmt_bytes(ma['argument_bytes_per_device'])} "
+            f"| {fmt_bytes(ma['temp_bytes_per_device'])} "
+            f"| {kinds} | {co.get('count', 0)} | {r.get('compile_s', 0)} |")
+    return "\n".join(rows)
+
+
+def summarize(results_dir: str):
+    data = load(results_dir)
+    for mesh_name, cells in data.items():
+        ok = [k for k, v in cells.items() if "error" not in v]
+        bad = [k for k, v in cells.items() if "error" in v]
+        def peak(k):
+            ma = cells[k]["memory_analysis"]
+            return ma.get("peak_adjusted_bytes_per_device",
+                          ma["argument_bytes_per_device"]
+                          + ma["temp_bytes_per_device"])
+
+        over = [k for k in ok if peak(k) > HBM_PER_CHIP]
+        print(f"== {mesh_name}: {len(ok)} ok, {len(bad)} errors, "
+              f"{len(over)} over 16GB/chip ==")
+        for k in bad:
+            print(f"   ERROR {k}: {cells[k]['error'][:100]}")
+        for k in over:
+            ma = cells[k]["memory_analysis"]
+            print(f"   OVER {k}: args {fmt_bytes(ma['argument_bytes_per_device'])}"
+                  f" + temp {fmt_bytes(ma['temp_bytes_per_device'])}"
+                  f" (adjusted {fmt_bytes(peak(k))})")
+        doms = {}
+        for k in ok:
+            d = cells[k]["roofline"]["dominant"]
+            doms[d] = doms.get(d, 0) + 1
+        print(f"   dominant terms: {doms}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    if args.markdown:
+        data = load(args.results)
+        for mesh_name, cells in data.items():
+            print(f"\n### Roofline — {mesh_name}\n")
+            print(roofline_table(cells, mesh_name))
+            print(f"\n### Dry-run — {mesh_name}\n")
+            print(dryrun_table(cells))
+    else:
+        summarize(args.results)
+
+
+if __name__ == "__main__":
+    main()

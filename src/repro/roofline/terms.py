@@ -1,0 +1,57 @@
+"""The three roofline terms (harness §ROOFLINE ANALYSIS).
+
+    compute_s    = FLOPs / (chips · 197e12)
+    memory_s     = HBM bytes / (chips · 819e9)        [per-device bytes · 1]
+    collective_s = wire bytes / (chips · links · 50e9)
+
+Links per chip: a v5e chip has 4 ICI links on the 2-D torus; on the
+(16, 16) mesh both dimensions are ring-connected, and cross-pod traffic
+('pod' axis) rides pod-level interconnect which we model at one link
+equivalent (conservative). We report link_count=4 for the intra-pod
+collective budget and note the assumption.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+LINKS_PER_CHIP = 4
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    step_time_s: float            # max of the three (overlap-ideal bound)
+    flops_executed: float
+    flops_model: float
+    useful_ratio: float           # model / executed
+    mfu_bound: float              # model flops / (step_time · chips · peak)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_executed: float, flops_model: float,
+                   bytes_hbm_per_device: float,
+                   collective_bytes_per_device: float,
+                   n_chips: int) -> RooflineTerms:
+    compute_s = flops_executed / (n_chips * PEAK_FLOPS)
+    memory_s = bytes_hbm_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / (LINKS_PER_CHIP * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step = max(terms.values())
+    mfu = (flops_model / (step * n_chips * PEAK_FLOPS)) if step > 0 else 0.0
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, step_time_s=step,
+        flops_executed=flops_executed, flops_model=flops_model,
+        useful_ratio=(flops_model / flops_executed) if flops_executed else 0.0,
+        mfu_bound=mfu)

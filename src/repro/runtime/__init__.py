@@ -1,0 +1,6 @@
+from repro.runtime.train import make_train_step, init_train_state
+from repro.runtime.serve import make_prefill_step, make_decode_step
+from repro.runtime.monitor import StepMonitor
+
+__all__ = ["make_train_step", "init_train_state", "make_prefill_step",
+           "make_decode_step", "StepMonitor"]

@@ -1,0 +1,68 @@
+"""LM loss with vocab-sharded logits.
+
+The (B, S, V) logits tensor is the largest activation in any LM step
+(qwen3 train_4k: 16 × 4096 × 151936 × 2 B ≈ 20 GB/device unsharded!).
+It is never materialized replicated: a sharding constraint pins the vocab
+axis to the TP axis, the log-softmax reduction over the sharded axis
+lowers to two small all-reduces, and the gold-logit gather is a one-hot
+einsum that partitions the same way — the paper's "never materialize the
+big intermediate" rule applied to the loss (DESIGN §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ShardingRules, logits_spec
+
+
+_LOSS_CHUNK = 1024
+
+
+def _nll_block(table, hidden, targets, cfg, rules):
+    """Mean-able NLL sum over one (B, C) block. Vocab-sharded logits."""
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table)
+    if rules is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, logits_spec(rules, targets.shape[0], cfg.vocab))
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)                       # (B, C)
+    from repro.sharding import ctx as shard_ctx
+    one_hot = jax.nn.one_hot(targets, cfg.vocab, dtype=jnp.float32)
+    one_hot = shard_ctx.constrain(one_hot, "dp", None, "tp")  # match logits
+    gold = jnp.einsum("bsv,bsv->bs", one_hot, logits)
+    return jnp.sum(logz - gold)
+
+
+def lm_loss(embed_params: dict, hidden: jax.Array, targets: jax.Array,
+            cfg, rules: ShardingRules = None):
+    """hidden: (B, S, D); targets: (B, S) int32 → scalar mean NLL.
+
+    The sequence is scanned in chunks so the (B, S, V) logits (and their
+    f32 cotangents) never materialize — the full-length loss stack was
+    the single largest live set in the train step (≈8 GB/device at
+    B=256, qwen3 — §Perf A, iteration hc-A4). For the VLM arch the
+    hidden sequence is longer than the targets (patch positions
+    prepended); loss is computed on the trailing text positions only.
+    """
+    s_text = targets.shape[1]
+    if hidden.shape[1] != s_text:
+        hidden = hidden[:, -s_text:]
+    table = embed_params["table"] if cfg.tie_embeddings else embed_params["head"]
+
+    b, s = targets.shape
+    c = _LOSS_CHUNK
+    if s % c or s <= c:
+        return _nll_block(table, hidden, targets, cfg, rules) / (b * s)
+
+    nc = s // c
+    hs = jnp.moveaxis(hidden.reshape(b, nc, c, hidden.shape[-1]), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, nc, c), 1, 0)
+
+    def body(acc, args):
+        h_i, t_i = args
+        return acc + _nll_block(table, h_i, t_i, cfg, rules), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts))
+    return total / (b * s)

@@ -1,0 +1,88 @@
+"""Straggler detection and step-time accounting.
+
+At 1000+ nodes the dominant availability hazards are (a) hosts that die
+(handled by checkpoint/restart + elastic re-shard) and (b) hosts that
+*slow down* — stragglers stretch every synchronous collective. This
+monitor implements the detection half that any TPU-pod runner needs:
+
+* rolling median step time with MAD-based outlier flagging
+  (``threshold = median · k``);
+* a deadline watchdog: a callable heartbeat that raises after
+  ``deadline_factor × median`` so the launcher can checkpoint + evict
+  (the eviction itself is the cluster scheduler's job);
+* per-step records exportable for the roofline/§Perf logs.
+
+tests/test_runtime.py injects synthetic delays to verify flagging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    straggler: bool
+
+
+class StepMonitor:
+    def __init__(self, k: float = 3.0, warmup: int = 3,
+                 deadline_factor: float = 10.0):
+        self.k = k
+        self.warmup = warmup
+        self.deadline_factor = deadline_factor
+        self.records: List[StepRecord] = []
+        self._t0: Optional[float] = None
+
+    # -- timing ---------------------------------------------------------
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> StepRecord:
+        dt = time.perf_counter() - self._t0
+        return self.record(step, dt)
+
+    def record(self, step: int, seconds: float) -> StepRecord:
+        flagged = False
+        base = [r.seconds for r in self.records if not r.straggler]
+        if len(base) >= self.warmup:
+            med = statistics.median(base)
+            flagged = seconds > self.k * med
+        rec = StepRecord(step, seconds, flagged)
+        self.records.append(rec)
+        return rec
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def median(self) -> float:
+        base = [r.seconds for r in self.records if not r.straggler]
+        return statistics.median(base) if base else float("nan")
+
+    def stragglers(self) -> List[StepRecord]:
+        return [r for r in self.records if r.straggler]
+
+    def deadline(self) -> float:
+        """Per-step watchdog deadline (seconds)."""
+        m = self.median
+        return (m * self.deadline_factor) if m == m else float("inf")
+
+    def check_deadline(self, elapsed: float):
+        if elapsed > self.deadline():
+            raise TimeoutError(
+                f"step exceeded straggler deadline ({elapsed:.1f}s > "
+                f"{self.deadline():.1f}s) — checkpoint and evict")
+
+    def summary(self) -> dict:
+        secs = [r.seconds for r in self.records]
+        return {
+            "steps": len(secs),
+            "median_s": self.median,
+            "p90_s": (statistics.quantiles(secs, n=10)[-1]
+                      if len(secs) >= 10 else max(secs, default=float("nan"))),
+            "stragglers": len(self.stragglers()),
+        }

@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ShardingRules, make_rules, param_specs,
+                                  cache_specs, batch_spec, named)
+
+__all__ = ["ShardingRules", "make_rules", "param_specs", "cache_specs",
+           "batch_spec", "named"]

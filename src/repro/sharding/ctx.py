@@ -1,0 +1,77 @@
+"""Activation-sharding context.
+
+GSPMD propagates parameter shardings well, but long scan chains can drop
+the *batch* sharding of the residual stream (observed on the dry-run:
+f32 logits (256, 4096, V/16) — 40 GB/device — because `hidden` reached
+the loss batch-replicated). Production JAX LM stacks pin activation
+shardings explicitly at layer boundaries; this context carries the
+current ShardingRules into model code without threading it through every
+call signature.
+
+The runtime step functions enter ``use_rules(rules)`` *inside* the traced
+function, so the constraints are baked in at trace time; when no context
+is set (unit tests, kernels), ``constrain`` is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CURRENT: Optional[object] = None      # ShardingRules
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = rules
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def current_rules():
+    return _CURRENT
+
+
+def constrain_batch(x: jax.Array, batch_dim: int = 0,
+                    seq_dim: Optional[int] = None) -> jax.Array:
+    """Pin dim ``batch_dim`` to the DP axes (divisibility-checked) and —
+    when ``seq_dim`` is given — that dim to the TP axis (sequence-parallel
+    residual stream). Leaves the rest to GSPMD."""
+    r = _CURRENT
+    if r is None:
+        return x
+    from repro.sharding.rules import _fit
+    spec = [None] * x.ndim
+    spec[batch_dim] = _fit(x.shape[batch_dim], r.dp, r)
+    if seq_dim is not None:
+        spec[seq_dim] = _fit(x.shape[seq_dim], r.tp, r)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec)))
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """Explicit spec: constrain(x, 'dp', None, 'tp') maps 'dp'→rules.dp,
+    'tp'→rules.tp with divisibility checks."""
+    r = _CURRENT
+    if r is None:
+        return x
+    from repro.sharding.rules import _fit
+    spec = []
+    for dim, a in enumerate(axes):
+        if a == "dp":
+            spec.append(_fit(x.shape[dim], r.dp, r))
+        elif a == "tp":
+            spec.append(_fit(x.shape[dim], r.tp, r))
+        else:
+            spec.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec)))

@@ -1,0 +1,228 @@
+"""Logical-axis → mesh-axis sharding rules (DESIGN §5).
+
+Parallelism layout on the production mesh (pod?, data, model):
+
+* **DP**   — batch over ('pod', 'data');
+* **FSDP** — weight/optimizer-state sharding over the same DP axes
+             (ZeRO-3 under GSPMD: all-gather at use, reduce-scatter grads);
+* **TP**   — heads / d_ff / experts / vocab / recurrent channels over
+             'model';
+* **EP**   — MoE experts over 'model' when E divides it (granite 32e);
+             otherwise TP inside each expert's FFN (grok 8e);
+* **SP**   — decode-time KV caches shard their *sequence* axis over
+             'model' (flash-decoding: the softmax reductions over the
+             sharded axis lower to two small all-reduces per layer).
+
+Rules are name-based over the param pytree paths; every rule fits the
+axis only when the dimension divides it (``_fit``) so no GSPMD padding
+is silently introduced — fallbacks are explicit (e.g. llama3.2's 24
+heads → attention weights replicated over TP, smaller prefill query
+chunks bound the head-replicated score buffer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    dp: Tuple[str, ...]      # batch axes, e.g. ("pod", "data") / ("data",)
+    fsdp: Tuple[str, ...]    # weight-sharding axes
+    tp: str = "model"
+
+    def axis_size(self, axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+
+def make_rules(mesh: Mesh, fsdp: bool = True) -> ShardingRules:
+    """fsdp=True → ZeRO-3 weight sharding over the DP axes (memory-min);
+    fsdp=False → weights/opt-state replicated over DP, TP only
+    (collective-min: no per-use weight all-gathers, one grad all-reduce).
+    The FSDP↔DP choice is the main §Perf lever for models whose optimizer
+    state fits replicated."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return ShardingRules(mesh=mesh, dp=dp, fsdp=dp if fsdp else ())
+
+
+def _fit(dim: int, axes, rules: ShardingRules):
+    """Largest suffix-truncated axis group whose product divides ``dim``.
+    ('pod','data') → try both, then ('data',), then None."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(axes)
+    while axes:
+        if dim % rules.axis_size(axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[1:]
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+def _param_spec(name: str, shape, cfg, rules: ShardingRules) -> P:
+    tp, fsdp = rules.tp, rules.fsdp
+    nd = len(shape)
+    leaf = name.rsplit("/", 1)[-1]
+
+    if leaf in ("table", "head"):                       # (V, D)
+        return P(_fit(shape[0], tp, rules), _fit(shape[1], fsdp, rules))
+    if leaf in ("wq", "wk", "wv"):                      # (D, H, hd)
+        # kv heads that do not fit the TP axis are REPLICATED (attention
+        # expands K/V to the full head count — see models/attention._attend);
+        # their weights are small (D·K·hd).
+        h_ax = _fit(shape[1], tp, rules)
+        return P(_fit(shape[0], fsdp, rules), h_ax, None)
+    if leaf == "wo":                                    # (H, hd, D)
+        h_ax = _fit(shape[0], tp, rules)
+        return P(h_ax, None, _fit(shape[2], fsdp, rules))
+    if leaf in ("bq", "bk", "bv"):                      # (H, hd)
+        return P(_fit(shape[0], tp, rules), None)
+    if leaf in ("w_gate", "w_up"):
+        if nd == 3:                                     # (E, D, F) MoE
+            e_ax = _fit(shape[0], tp, rules)
+            f_ax = None if e_ax else _fit(shape[2], tp, rules)
+            return P(e_ax, _fit(shape[1], fsdp, rules), f_ax)
+        return P(_fit(shape[0], fsdp, rules), _fit(shape[1], tp, rules))
+    if leaf == "w_down":
+        if nd == 3:                                     # (E, F, D) MoE
+            e_ax = _fit(shape[0], tp, rules)
+            f_ax = None if e_ax else _fit(shape[1], tp, rules)
+            return P(e_ax, f_ax, _fit(shape[2], fsdp, rules))
+        return P(_fit(shape[0], tp, rules), _fit(shape[1], fsdp, rules))
+    if leaf == "router":                                # (D, E) fp32
+        return P(_fit(shape[0], fsdp, rules), None)
+    # recurrent block
+    if leaf in ("w_gate_branch", "w_rec_branch"):       # (D, R)
+        return P(_fit(shape[0], fsdp, rules), _fit(shape[1], tp, rules))
+    if leaf in ("w_a", "w_x") and nd == 2 and shape[0] == shape[1]:
+        return P(_fit(shape[0], fsdp, rules), _fit(shape[1], tp, rules))
+    if leaf in ("b_a", "b_x", "lambda"):                # (R,)
+        return P(_fit(shape[0], tp, rules))
+    if leaf == "w_out":                                 # (R|di, D)
+        return P(_fit(shape[0], tp, rules), _fit(shape[1], fsdp, rules))
+    # ssd block
+    if leaf in ("w_x", "w_z"):                          # (D, di)
+        return P(_fit(shape[0], fsdp, rules), _fit(shape[1], tp, rules))
+    if leaf in ("w_b", "w_c"):                          # (D, g*N)
+        # g·N is tiny (128 for mamba2); TP-sharding it turns every SSD
+        # state contraction into a psum of x-sized f32 tensors — replicate
+        # (§Perf C, iteration hc-C3)
+        return P(_fit(shape[0], fsdp, rules), None)
+    if leaf == "w_dt":                                  # (D, nh)
+        return P(_fit(shape[0], fsdp, rules), _fit(shape[1], tp, rules))
+    if leaf in ("dt_bias", "a_log", "d_skip"):          # (nh,)
+        return P(_fit(shape[0], tp, rules))
+    if leaf == "conv_w":                                # (W, channels)
+        return P(None, _fit(shape[1], tp, rules))
+    if leaf == "norm_w":                                # (di,)
+        return P(_fit(shape[0], tp, rules))
+    if leaf == "proj":                                  # frontend (fd, D)
+        return P(None, _fit(shape[1], fsdp, rules))
+    # norms / scalars / anything small: replicate
+    return P(*([None] * nd))
+
+
+_STACKED_PREFIXES = ("blocks", "enc_blocks", "dec_blocks")
+
+
+def param_specs(cfg, params, rules: ShardingRules):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+    Scanned stacks get a leading None (layer axis unsharded)."""
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        stacked = name.split("/", 1)[0] in _STACKED_PREFIXES
+        if stacked:
+            spec = _param_spec(name, shape[1:], cfg, rules)
+            return P(None, *spec)
+        return _param_spec(name, shape, cfg, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# cache rules (decode/prefill state)
+# --------------------------------------------------------------------------
+def _cache_spec(name: str, shape, cfg, rules: ShardingRules) -> P:
+    dp, tp = rules.dp, rules.tp
+    leaf = name.rsplit("/", 1)[-1]
+    nd = len(shape)
+    if leaf in ("k", "v", "cross_k", "cross_v"):        # (B, S, K, hd)
+        b_ax = _fit(shape[0], dp, rules)
+        # SP: sequence over 'model' (flash-decoding); ring buffers (local
+        # windows) stay unsharded in seq — they are small.
+        s_ax = _fit(shape[1], tp, rules) if shape[1] > 4096 else None
+        k_ax = None if s_ax else _fit(shape[2], tp, rules)
+        return P(b_ax, s_ax, k_ax, None)
+    if leaf in ("k_scale", "v_scale"):                  # (B, S, K)
+        b_ax = _fit(shape[0], dp, rules)
+        s_ax = _fit(shape[1], tp, rules) if shape[1] > 4096 else None
+        return P(b_ax, s_ax, None)
+    if leaf == "pos" and nd == 1:
+        return P(None)
+    if leaf == "conv":                                  # (B, W-1, channels)
+        return P(_fit(shape[0], dp, rules), None, _fit(shape[2], tp, rules))
+    if leaf == "h":
+        if nd == 2:                                     # rec state (B, R)
+            return P(_fit(shape[0], dp, rules), _fit(shape[1], tp, rules))
+        if nd == 4:                                     # ssd state (B,nh,N,hd)
+            return P(_fit(shape[0], dp, rules), _fit(shape[1], tp, rules),
+                     None, None)
+    return P(*([None] * nd))
+
+
+def cache_specs(cfg, cache, rules: ShardingRules):
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if not shape:
+            return P()
+        stacked = any(s in name.split("/") for s in ("blocks", "dec"))
+        if stacked and len(shape) >= 1:
+            spec = _cache_spec(name, shape[1:], cfg, rules)
+            return P(None, *spec)
+        return _cache_spec(name, shape, cfg, rules)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# --------------------------------------------------------------------------
+# batch / activation rules
+# --------------------------------------------------------------------------
+def batch_spec(rules: ShardingRules, batch: int, rank: int = 2) -> P:
+    """Tokens/targets (B, S): batch over the DP axes that divide it."""
+    b_ax = _fit(batch, rules.dp, rules)
+    return P(b_ax, *([None] * (rank - 1)))
+
+
+def logits_spec(rules: ShardingRules, batch: int, vocab: int) -> P:
+    return P(_fit(batch, rules.dp, rules), None, _fit(vocab, rules.tp, rules))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

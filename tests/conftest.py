@@ -1,0 +1,22 @@
+"""Shared fixtures. Deliberately does NOT set
+--xla_force_host_platform_device_count: tests must see the real host
+device (the 512-device override belongs to launch/dryrun.py only).
+Distributed tests spawn subprocesses with their own flags."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

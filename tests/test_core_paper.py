@@ -1,0 +1,184 @@
+"""Paper-core behaviour tests: centering (§4.1), mantel (§4.2),
+validation (§4.3), pcoa end-to-end — optimized paths vs the originals
+and vs scipy where applicable."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.stats import pearsonr as scipy_pearsonr
+
+from repro.core import (DistanceMatrix, DistanceMatrixError, mantel,
+                        mantel_ref, pcoa, random_distance_matrix)
+from repro.core.centering import (center_distance_matrix,
+                                  center_distance_matrix_blocked,
+                                  center_distance_matrix_ref)
+from repro.core.validation import (is_symmetric_and_hollow,
+                                   is_symmetric_and_hollow_blocked,
+                                   is_symmetric_and_hollow_ref)
+
+
+# --------------------------------------------------------------------------
+# centering
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [8, 65, 128])
+def test_center_fused_equals_original(n):
+    dm = random_distance_matrix(jax.random.PRNGKey(n), n).data
+    np.testing.assert_allclose(center_distance_matrix(dm),
+                               center_distance_matrix_ref(dm),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_center_blocked_equals_fused():
+    dm = random_distance_matrix(jax.random.PRNGKey(0), 128).data
+    np.testing.assert_allclose(center_distance_matrix_blocked(dm, block=32),
+                               center_distance_matrix(dm),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_centered_matrix_is_gower():
+    """Row and column means of the centered matrix must vanish."""
+    dm = random_distance_matrix(jax.random.PRNGKey(1), 96).data
+    f = center_distance_matrix(dm)
+    np.testing.assert_allclose(np.asarray(f).mean(0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f).mean(1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(f, np.asarray(f).T, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# mantel
+# --------------------------------------------------------------------------
+def test_mantel_stat_equals_scipy_pearson():
+    n = 48
+    x = random_distance_matrix(jax.random.PRNGKey(2), n)
+    y = random_distance_matrix(jax.random.PRNGKey(3), n)
+    stat, _, _ = mantel(x, y, permutations=8)
+    iu = np.triu_indices(n, k=1)
+    want = scipy_pearsonr(np.asarray(x.data)[iu],
+                          np.asarray(y.data)[iu]).statistic
+    assert abs(stat - want) < 1e-5
+
+
+def test_mantel_optimized_equals_original():
+    """Same key ⇒ identical permutations ⇒ identical null distribution."""
+    n, k = 32, 16
+    x = random_distance_matrix(jax.random.PRNGKey(4), n)
+    y = random_distance_matrix(jax.random.PRNGKey(5), n)
+    key = jax.random.PRNGKey(7)
+    s_opt, p_opt, _ = mantel(x, y, permutations=k, key=key)
+    s_ref, p_ref, _ = mantel_ref(x, y, permutations=k, key=key)
+    assert abs(s_opt - s_ref) < 1e-5
+    assert abs(p_opt - p_ref) < 1e-9
+
+
+def test_mantel_self_correlation():
+    x = random_distance_matrix(jax.random.PRNGKey(6), 40)
+    stat, p, n = mantel(x, x, permutations=32)
+    assert abs(stat - 1.0) < 1e-5
+    assert p <= 2.0 / 33 + 1e-9          # identity is the best permutation
+    assert n == 40
+
+
+def test_mantel_correlated_matrices_significant():
+    """y = distances of slightly-perturbed points ⇒ strong correlation."""
+    key = jax.random.PRNGKey(8)
+    pts = jax.random.normal(key, (50, 4))
+    pts2 = pts + 0.01 * jax.random.normal(jax.random.fold_in(key, 1), (50, 4))
+
+    def dmat(p):
+        d2 = jnp.sum((p[:, None] - p[None, :]) ** 2, -1)
+        d = jnp.sqrt(jnp.maximum(d2, 0))
+        d = 0.5 * (d + d.T)
+        return DistanceMatrix(d - jnp.diag(jnp.diag(d)),
+                              _skip_validation=True)
+
+    stat, p, _ = mantel(dmat(pts), dmat(pts2), permutations=99)
+    assert stat > 0.95
+    assert p <= 0.02
+
+
+def test_mantel_alternatives():
+    x = random_distance_matrix(jax.random.PRNGKey(9), 30)
+    y = random_distance_matrix(jax.random.PRNGKey(10), 30)
+    for alt in ("two-sided", "greater", "less"):
+        stat, p, _ = mantel(x, y, permutations=16, alternative=alt)
+        assert 0.0 < p <= 1.0
+    with pytest.raises(ValueError):
+        mantel(x, y, permutations=4, alternative="bogus")
+
+
+# --------------------------------------------------------------------------
+# validation + DistanceMatrix semantics
+# --------------------------------------------------------------------------
+def test_validation_paths_agree():
+    dm = random_distance_matrix(jax.random.PRNGKey(11), 96).data
+    for m in (dm, dm.at[3, 4].add(1.0), dm.at[5, 5].set(2.0)):
+        ref = is_symmetric_and_hollow_ref(m)
+        fused = is_symmetric_and_hollow(m)
+        blocked = is_symmetric_and_hollow_blocked(m, block=32)
+        assert (bool(ref[0]), bool(ref[1])) == \
+            (bool(fused[0]), bool(fused[1])) == \
+            (bool(blocked[0]), bool(blocked[1]))
+
+
+def test_distance_matrix_rejects_bad():
+    good = random_distance_matrix(jax.random.PRNGKey(12), 16).data
+    with pytest.raises(DistanceMatrixError):
+        DistanceMatrix(good.at[0, 1].add(1.0))
+    with pytest.raises(DistanceMatrixError):
+        DistanceMatrix(good.at[2, 2].set(1.0))
+    with pytest.raises(DistanceMatrixError):
+        DistanceMatrix(jnp.zeros((3, 4)))
+
+
+def test_validation_caching_on_copy_and_permute():
+    """Paper §4.3: derived objects skip re-validation."""
+    dm = random_distance_matrix(jax.random.PRNGKey(13), 16)
+    assert dm._validated
+    assert dm.copy()._validated
+    perm = dm.permute(np.arange(16)[::-1])
+    assert perm._validated
+    flat = dm.permute(np.arange(16)[::-1], condensed=True)
+    assert flat.shape == (16 * 15 // 2,)
+
+
+# --------------------------------------------------------------------------
+# pcoa
+# --------------------------------------------------------------------------
+def test_pcoa_fsvd_matches_eigh():
+    """Low-rank (dim=4) Euclidean distances: top-4 eigenpairs must agree."""
+    dm = random_distance_matrix(jax.random.PRNGKey(14), 80, dim=4)
+    r_eigh = pcoa(dm, dimensions=4, method="eigh")
+    r_fsvd = pcoa(dm, dimensions=4, method="fsvd")
+    np.testing.assert_allclose(r_fsvd.eigenvalues, r_eigh.eigenvalues,
+                               rtol=1e-3)
+    # coordinates match up to per-axis sign
+    for j in range(4):
+        a = np.asarray(r_fsvd.coordinates[:, j])
+        b = np.asarray(r_eigh.coordinates[:, j])
+        assert min(np.abs(a - b).max(), np.abs(a + b).max()) < 1e-2
+
+
+def test_pcoa_recovers_embedding_dim():
+    """dim=3 points ⇒ exactly 3 significant eigenvalues."""
+    dm = random_distance_matrix(jax.random.PRNGKey(15), 60, dim=3)
+    res = pcoa(dm, dimensions=8, method="eigh")
+    ev = np.asarray(res.eigenvalues)
+    assert (ev[:3] > 1e-3).all()
+    assert np.abs(ev[3:]).max() < 1e-3 * ev[0]
+
+
+def test_pcoa_centering_impls_agree():
+    dm = random_distance_matrix(jax.random.PRNGKey(16), 64, dim=5)
+    a = pcoa(dm, dimensions=3, method="eigh", centering_impl="ref")
+    b = pcoa(dm, dimensions=3, method="eigh", centering_impl="fused")
+    np.testing.assert_allclose(a.eigenvalues, b.eigenvalues, rtol=1e-4)
+
+
+def test_pcoa_proportions():
+    dm = random_distance_matrix(jax.random.PRNGKey(17), 50, dim=4)
+    res = pcoa(dm, dimensions=4, method="eigh")
+    prop = np.asarray(res.proportion_explained)
+    assert (prop >= 0).all()
+    assert prop.sum() <= 1.0 + 1e-5
+    assert prop.sum() > 0.95          # rank-4 structure fully captured

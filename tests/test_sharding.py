@@ -1,0 +1,111 @@
+"""Sharding-rule tests: specs are divisibility-valid for every arch on the
+production mesh shapes — without touching device state (pure spec logic
+on an abstract mesh via jax.eval_shape trees)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.runtime.serve import abstract_cache
+from repro.runtime.train import abstract_train_state
+from repro.sharding.rules import (ShardingRules, _fit, batch_spec,
+                                  cache_specs, param_specs, make_rules)
+
+
+def _abstract_rules(shape=(16, 16), axes=("data", "model")):
+    mesh = AbstractMesh(shape, axes)
+    return make_rules(mesh)
+
+
+def test_fit_prefers_full_group_then_truncates():
+    r = _abstract_rules((2, 16, 16), ("pod", "data", "model"))
+    assert _fit(64, ("pod", "data"), r) == ("pod", "data")
+    assert _fit(16, ("pod", "data"), r) == "data"      # 16 % 32 != 0
+    assert _fit(7, ("pod", "data"), r) is None
+    assert _fit(32, "model", r) == "model"
+    assert _fit(24, "model", r) is None                # llama heads
+
+
+def _check_spec_tree(tree, specs, rules):
+    flat_t = jax.tree.leaves(tree)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_t) == len(flat_s)
+    for leaf, spec in zip(flat_t, flat_s):
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = rules.axis_size(ax)
+            assert leaf.shape[dim] % size == 0, \
+                f"shape {leaf.shape} dim {dim} not divisible by {ax}({size})"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh_shape,axes", [
+    ((16, 16), ("data", "model")),
+    ((2, 16, 16), ("pod", "data", "model")),
+])
+def test_param_specs_divisible_all_archs(arch, mesh_shape, axes):
+    cfg = ARCHS[arch]
+    rules = _abstract_rules(mesh_shape, axes)
+    params, opt = abstract_train_state(cfg)
+    specs = param_specs(cfg, params, rules)
+    _check_spec_tree(params, specs, rules)
+    # opt-state m/v reuse the param specs — same divisibility holds
+    _check_spec_tree(opt["m"], specs, rules)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-1.3b",
+                                  "recurrentgemma-9b", "seamless-m4t-medium"])
+def test_cache_specs_divisible(arch):
+    cfg = ARCHS[arch]
+    rules = _abstract_rules()
+    cache = abstract_cache(cfg, 128, 32768,
+                           enc_len=(8192 if cfg.is_encdec else 0))
+    specs = cache_specs(cfg, cache, rules)
+    _check_spec_tree(cache, specs, rules)
+
+
+def test_deep_cache_is_sequence_sharded():
+    """decode_32k full-attention caches must shard seq over 'model'
+    (flash-decoding, DESIGN §5)."""
+    cfg = ARCHS["qwen3-8b"]
+    rules = _abstract_rules()
+    cache = abstract_cache(cfg, 128, 32768)
+    specs = cache_specs(cfg, cache, rules)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    kv = [s for p, s in flat if any(getattr(e, "key", "") == "k" for e in p)]
+    assert kv, "no k cache leaves found"
+    for spec in kv:
+        assert spec[2] == "model", spec   # (layer, batch, SEQ→model, ...)
+
+
+def test_batch_spec_handles_indivisible_batch():
+    rules = _abstract_rules()
+    assert batch_spec(rules, 256) == P("data", None)
+    assert batch_spec(rules, 1) == P(None, None)       # long_500k B=1
+    assert batch_spec(rules, 24, rank=3) is not None
+
+
+def test_moe_expert_axis_choice():
+    """granite (32e) → experts on 'model' (EP); grok (8e) → TP inside the
+    expert FFN instead."""
+    rules = _abstract_rules()
+    g_params, _ = abstract_train_state(ARCHS["granite-moe-1b-a400m"])
+    g_specs = param_specs(ARCHS["granite-moe-1b-a400m"], g_params, rules)
+    k_params, _ = abstract_train_state(ARCHS["grok-1-314b"])
+    k_specs = param_specs(ARCHS["grok-1-314b"], k_params, rules)
+
+    def moe_up_spec(specs):
+        flat = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+        return [s for p, s in flat
+                if any(getattr(e, "key", "") == "w_up" for e in p)
+                and len(s) == 4][0]   # stacked (L, E, D, F)
+
+    assert moe_up_spec(g_specs)[1] == "model"       # EP on experts
+    assert moe_up_spec(k_specs)[1] is None          # 8 experts don't fit
+    assert moe_up_spec(k_specs)[3] == "model"       # → TP on d_ff
