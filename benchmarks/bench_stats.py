@@ -1,0 +1,74 @@
+"""repro.stats sweep: eager scikit-bio-style oracles vs the hoisted+fused
+engine paths, for PERMANOVA, ANOSIM and the partial Mantel test.
+
+``PYTHONPATH=src python -m benchmarks.run --suite stats``
+
+Emits ``BENCH_stats.json`` so the perf trajectory of the subsystem is
+recorded per PR. The measured quantity is the ref/fused wall-clock RATIO
+at n ∈ {512, 2048}, K=999 (the acceptance gate is ≥5x at n=2048); refs
+are timed once (no warmup — eager paths have nothing to compile)."""
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core.distance_matrix import random_distance_matrix
+from repro.stats import (anosim, anosim_ref, partial_mantel,
+                         partial_mantel_ref, permanova, permanova_ref)
+
+_NUM_GROUPS = 8
+
+
+def _inputs(n):
+    x = random_distance_matrix(jax.random.PRNGKey(n), n)
+    y = random_distance_matrix(jax.random.PRNGKey(n + 1), n)
+    z = random_distance_matrix(jax.random.PRNGKey(n + 2), n)
+    grouping = np.arange(n) % _NUM_GROUPS
+    return x, y, z, grouping
+
+
+def run(sizes=(512, 2048), permutations=999, out_json="BENCH_stats.json"):
+    print(f"\n# repro.stats — ref (eager multi-pass) vs fused engine, "
+          f"K={permutations}, {_NUM_GROUPS} groups")
+    key = jax.random.PRNGKey(7)
+    results = {}
+    for n in sizes:
+        x, y, z, grouping = _inputs(n)
+        cases = {
+            "permanova": (lambda: permanova_ref(x, grouping, permutations, key),
+                          lambda: permanova(x, grouping, permutations, key)),
+            "anosim": (lambda: anosim_ref(x, grouping, permutations, key),
+                       lambda: anosim(x, grouping, permutations, key)),
+            "partial_mantel": (
+                lambda: partial_mantel_ref(x, y, z, permutations, key),
+                lambda: partial_mantel(x, y, z, permutations, key)),
+        }
+        results[n] = {}
+        for name, (ref_fn, fused_fn) in cases.items():
+            t_ref = time_fn(lambda: ref_fn().p_value, repeats=1, warmup=0)
+            row("stats", f"{name}_k{permutations}", "original", n, t_ref)
+            t_fused = time_fn(lambda: fused_fn().p_value, repeats=2, warmup=1)
+            row("stats", f"{name}_k{permutations}", "fused", n, t_fused,
+                baseline=t_ref)
+            results[n][name] = {"ref": t_ref, "fused": t_fused,
+                                "speedup": t_ref / t_fused}
+
+    if out_json:
+        artifact = {
+            "suite": "stats",
+            "permutations": permutations,
+            "num_groups": _NUM_GROUPS,
+            "jax": jax.__version__,
+            "device_count": jax.device_count(),
+            "results": {str(n): r for n, r in results.items()},
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

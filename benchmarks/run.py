@@ -1,13 +1,16 @@
 """Benchmark harness — one section per paper table (deliverable (d)).
 
-``PYTHONPATH=src python -m benchmarks.run [--fast]``
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--suite paper|stats]``
 
-Sections:
-  Table 1 — centering (original vs fused)
-  Table 2 — mantel (original vs hoisted+fused)
-  Table 3 — validation (original vs fused)
-  §4.1    — pcoa end-to-end + validation caching
-  summary — measured speedups vs the paper's claimed ranges
+Suites:
+  paper (default) — the paper's tables:
+    Table 1 — centering (original vs fused)
+    Table 2 — mantel (original vs hoisted+fused)
+    Table 3 — validation (original vs fused)
+    §4.1    — pcoa end-to-end + validation caching
+    summary — measured speedups vs the paper's claimed ranges
+  stats — the repro.stats subsystem (PERMANOVA / ANOSIM / partial Mantel,
+    ref vs fused at n ∈ {512, 2048}, K=999); writes BENCH_stats.json.
 """
 
 import argparse
@@ -16,13 +19,15 @@ import platform
 import jax
 
 from benchmarks import bench_center, bench_mantel, bench_pcoa, \
-    bench_validation
+    bench_stats, bench_validation
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes / fewer repeats")
+    ap.add_argument("--suite", default="paper", choices=("paper", "stats"),
+                    help="paper tables (default) or the repro.stats sweep")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -30,6 +35,20 @@ def main() -> None:
     print("# paper: Sfiligoi/McDonald/Knight PEARC'21 — sizes scaled to "
           "one CPU core; the measured quantity is the fused-vs-multipass "
           "RATIO (see EXPERIMENTS.md §Benchmarks)")
+
+    if args.suite == "stats":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size (n=2048, K=999) trajectory file
+            s = bench_stats.run(sizes=(256, 512), permutations=199,
+                                out_json="BENCH_stats_fast.json")
+        else:
+            s = bench_stats.run()
+        print("\n# summary — speedup (original / fused), repro.stats engine")
+        for n, per_stat in s.items():
+            for name, r in per_stat.items():
+                print(f"{name:15s} n={n:<6d} {r['speedup']:6.1f}x")
+        return
 
     if args.fast:
         c = bench_center.run(sizes=(2048, 4096))

@@ -69,34 +69,47 @@ def center_distance_matrix(distance_matrix: jax.Array) -> jax.Array:
 def center_distance_matrix_blocked(distance_matrix: jax.Array, block: int = 1024) -> jax.Array:
     """Structurally faithful port of Algorithm 2's two Cython loops, with
     explicit row-block tiling (`prange(n_samples)` → scan over row blocks).
-    Exists to validate the tiling logic the Pallas kernel uses."""
+    Exists to validate the tiling logic the Pallas kernel uses.
+
+    ``n % block != 0`` is handled by zero-padding the trailing block: padded
+    entries contribute 0 to E (−½·0² = 0), so every sum over the *true* n
+    is unchanged; the means divide by the true n explicitly and the padded
+    rows/columns are sliced off at the end."""
     n = distance_matrix.shape[0]
-    if n % block != 0:
-        return center_distance_matrix(distance_matrix)
-    nb = n // block
+    # clamp the block so a small n is never padded to a full default-sized
+    # block (n=100 with block=1024 would scan ~105x the real data)
+    block = min(block, ((n + 7) // 8) * 8)
+    pad = (-n) % block
+    if pad:
+        distance_matrix = jnp.pad(distance_matrix, ((0, pad), (0, pad)))
+    n_padded = n + pad
+    nb = n_padded // block
 
     # pass 1: e_matrix_means — compute E row-block at a time, accumulate sums
     def pass1(carry, i):
         del carry
-        rows = jax.lax.dynamic_slice(distance_matrix, (i * block, 0), (block, n))
+        rows = jax.lax.dynamic_slice(distance_matrix, (i * block, 0),
+                                     (block, n_padded))
         e_rows = -0.5 * rows * rows
         return None, (e_rows, jnp.sum(e_rows, axis=1))
 
     _, (e_blocks, row_sum_blocks) = jax.lax.scan(pass1, None, jnp.arange(nb))
-    e = e_blocks.reshape(n, n)
-    row_means = row_sum_blocks.reshape(n) / n
-    global_mean = jnp.mean(row_means)
+    e = e_blocks.reshape(n_padded, n_padded)
+    row_sums = row_sum_blocks.reshape(n_padded)
+    row_means = row_sums / n                       # true n, not n_padded
+    global_mean = jnp.sum(row_sums) / (n * n)
 
     # pass 2: f_matrix_inplace — tiled centering
     def pass2(carry, i):
         del carry
-        e_rows = jax.lax.dynamic_slice(e, (i * block, 0), (block, n))
+        e_rows = jax.lax.dynamic_slice(e, (i * block, 0), (block, n_padded))
         rm = jax.lax.dynamic_slice(row_means, (i * block,), (block,))
         out = e_rows + (global_mean - rm)[:, None] - row_means[None, :]
         return None, out
 
     _, out_blocks = jax.lax.scan(pass2, None, jnp.arange(nb))
-    return out_blocks.reshape(n, n)
+    out = out_blocks.reshape(n_padded, n_padded)
+    return out[:n, :n] if pad else out
 
 
 # --------------------------------------------------------------------------

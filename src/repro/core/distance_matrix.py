@@ -91,11 +91,20 @@ class DistanceMatrix:
 
 
 def condensed_to_square(condensed: jax.Array, n: int) -> jax.Array:
-    """Inverse of ``condensed_form``: symmetric matrix with zero diagonal."""
+    """Inverse of ``condensed_form``: symmetric matrix with zero diagonal.
+
+    Formulated as a gather through a host-precomputed (n, n) position map
+    rather than an ``.at[iu].set`` scatter: XLA:CPU scalarizes the 2M-element
+    scatter (~70x slower than the vectorized gather at n=2048), and this
+    runs inside every hoist pass of the stats engine."""
+    if n < 2:                              # empty triangle: nothing to gather
+        return jnp.zeros((n, n), dtype=condensed.dtype)
     iu = np.triu_indices(n, k=1)
-    out = jnp.zeros((n, n), dtype=condensed.dtype)
-    out = out.at[iu].set(condensed)
-    return out + out.T
+    pos = np.zeros((n, n), dtype=np.int32)
+    pos[iu] = np.arange(iu[0].size, dtype=np.int32)
+    pos = pos + pos.T                      # symmetric map; diagonal stays 0
+    off_diag = ~np.eye(n, dtype=bool)
+    return jnp.where(off_diag, condensed[pos], 0)
 
 
 def random_distance_matrix(key, n: int, dim: int = 8, dtype=jnp.float32) -> DistanceMatrix:

@@ -6,7 +6,10 @@ Monte-Carlo null distribution over K row/column permutations (default 999).
 * ``mantel_ref`` — Algorithms 3+4 verbatim: per permutation, materialize the
   permuted condensed form and call a black-box ``pearsonr`` (eager, multi-pass:
   subtract mean, norm, divide, dot — each a DRAM round-trip).
-* ``mantel`` — Algorithm 5's two hoisting observations plus fusion:
+* ``mantel`` — Algorithm 5's two hoisting observations plus fusion, expressed
+  as a ``repro.stats.engine.Statistic`` (this module is a thin client of the
+  shared permutation engine; the same split powers PERMANOVA, ANOSIM and the
+  partial Mantel test in ``repro.stats``):
     1. the second argument never changes ⇒ normalize ``y`` once;
     2. mean and norm are permutation-invariant ⇒ compute ``x̄``, ``‖x−x̄‖`` once.
   One further algebraic step (DESIGN §2): ``ŷ`` is centered ⇒ ``Σŷ = 0`` ⇒ the
@@ -18,10 +21,14 @@ Monte-Carlo null distribution over K row/column permutations (default 999).
   the reduction). Explicit VMEM tiling in ``repro.kernels.mantel_corr``.
 * ``mantel_distributed`` — permutations sharded over ('pod','data'), matrix
   columns over 'model': each device reduces its column block, one psum.
+  (The engine's ``permutation_test_distributed`` shards only the permutation
+  axis; this path additionally splits the matrix columns, so it stays
+  specialized here.)
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Optional
 
@@ -30,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
+from repro.stats import engine
 
 
 # --------------------------------------------------------------------------
@@ -49,9 +57,7 @@ def pearsonr_ref(x_flat: jax.Array, y_flat: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------
 # Algorithm 3 — original mantel (black-box pearsonr per permutation)
 # --------------------------------------------------------------------------
-def _permutation_orders(key, permutations: int, n: int) -> jax.Array:
-    keys = jax.random.split(key, permutations)
-    return jax.vmap(lambda k: jax.random.permutation(k, n))(keys)
+_permutation_orders = engine.permutation_orders    # owned by the engine now
 
 
 def mantel_ref(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
@@ -74,64 +80,53 @@ def mantel_ref(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
 
 
 # --------------------------------------------------------------------------
-# Algorithm 5 — hoisted + fused mantel
+# Algorithm 5 — hoisted + fused mantel, as an engine Statistic
 # --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("permutations", "alternative"))
-def _mantel_stats_fused(x_data: jax.Array, y_data: jax.Array, key,
-                        permutations: int, alternative: str):
-    n = x_data.shape[0]
-    iu = np.triu_indices(n, k=1)
-    x_flat = x_data[iu]
-    y_flat = y_data[iu]
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["x", "y"], meta_fields=["n"])
+@dataclasses.dataclass
+class MantelStatistic:
+    """Pearson r between permuted x and fixed y, hoisting split per §4.2."""
 
-    # --- hoisted permutation-invariant statistics (the paper's two tricks) ---
-    xmean = x_flat.mean()
-    xm = x_flat - xmean
-    normxm = jnp.linalg.norm(xm)
-    ym = y_flat - y_flat.mean()
-    ynorm = ym / jnp.linalg.norm(ym)                  # computed exactly once
-    orig_stat = jnp.dot(xm / normxm, ynorm)
+    x: jax.Array           # (n, n) permuted matrix
+    y: jax.Array           # (n, n) held fixed
+    n: int
 
-    # full symmetric centered-normalized y (diag 0): Σ_uptri == ½ Σ_full
-    y_full = condensed_to_square(ynorm, n)
+    def hoist(self):
+        iu = np.triu_indices(self.n, k=1)
+        x_flat = self.x[iu]
+        xm = x_flat - x_flat.mean()
+        normxm = jnp.linalg.norm(xm)                   # computed exactly once
+        y_flat = self.y[iu]
+        ym = y_flat - y_flat.mean()
+        ynorm = ym / jnp.linalg.norm(ym)               # computed exactly once
+        # full symmetric centered-normalized y (diag 0): Σ_uptri == ½ Σ_full
+        return {"normxm": normxm,
+                "y_full": condensed_to_square(ynorm, self.n)}
 
-    orders = _permutation_orders(key, permutations, n)
-
-    def one_perm(order):
+    def per_perm(self, inv, order):
         # two contiguous row-wise gathers + one fused multiply-reduce
-        xp = x_data[order][:, order]
-        return jnp.vdot(xp, y_full) / (2.0 * normxm)  # Σŷ=0 ⇒ mean term drops
-
-    # lax.map keeps peak memory at one permuted matrix; batching trades
-    # memory for gather throughput.
-    permuted_stats = jax.lax.map(one_perm, orders, batch_size=8)
-    return orig_stat, permuted_stats
+        xp = self.x[order][:, order]
+        return jnp.vdot(xp, inv["y_full"]) / (2.0 * inv["normxm"])
 
 
 def _finish(orig_stat, permuted_stats, permutations, alternative, n):
-    if alternative == "two-sided":
-        count_better = jnp.sum(jnp.abs(permuted_stats) >= jnp.abs(orig_stat))
-    elif alternative == "greater":
-        count_better = jnp.sum(permuted_stats >= orig_stat)
-    elif alternative == "less":
-        count_better = jnp.sum(permuted_stats <= orig_stat)
-    else:
-        raise ValueError(f"unknown alternative {alternative!r}")
-    p_value = (count_better + 1) / (permutations + 1)
-    return float(orig_stat), float(p_value), n
+    """Legacy tuple-returning finisher; the counting lives in the engine."""
+    r = engine.finish(orig_stat, permuted_stats, permutations, alternative, n)
+    return r.statistic, r.p_value, n
 
 
 def mantel(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
            key: Optional[jax.Array] = None, alternative: str = "two-sided"):
     """Cache-optimized Mantel test (paper Algorithm 5). Same interface and
-    semantics as ``mantel_ref``; ~100x less memory traffic."""
+    semantics as ``mantel_ref``; ~100x less memory traffic. Thin client of
+    ``repro.stats.engine.permutation_test``."""
     if len(x) != len(y):
         raise ValueError("x and y must have the same shape")
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    orig_stat, permuted_stats = _mantel_stats_fused(
-        x.data, y.data, key, permutations, alternative)
-    return _finish(orig_stat, permuted_stats, permutations, alternative, len(x))
+    r = engine.permutation_test(
+        MantelStatistic(x.data, y.data, len(x)),
+        permutations=permutations, key=key, alternative=alternative)
+    return r.statistic, r.p_value, r.sample_size
 
 
 # --------------------------------------------------------------------------
@@ -151,21 +146,26 @@ def mantel_distributed(x: DistanceMatrix, y: DistanceMatrix, mesh,
     identical regardless of mesh shape (elastic-safe).
     """
     from jax.sharding import PartitionSpec as P
+    from repro.stats.engine import _shard_map
 
     if key is None:
         key = jax.random.PRNGKey(0)
     n = len(x)
     x_data, y_data = x.data, y.data
 
-    iu = np.triu_indices(n, k=1)
-    x_flat = x_data[iu]
-    y_flat = y_data[iu]
-    xm = x_flat - x_flat.mean()
-    normxm = jnp.linalg.norm(xm)
-    ym = y_flat - y_flat.mean()
-    ynorm = ym / jnp.linalg.norm(ym)
-    orig_stat = jnp.dot(xm / normxm, ynorm)
-    y_full = condensed_to_square(ynorm, n)
+    # one hoist implementation for host and distributed paths — only the
+    # column-sharded reduction below stays specialized; the observed stat
+    # is jitted so the identity-order gathers fuse away instead of
+    # materializing two full n×n copies eagerly
+    stat = MantelStatistic(x_data, y_data, n)
+
+    @jax.jit
+    def _hoist_and_observe(s):
+        inv = s.hoist()
+        return inv, s.per_perm(inv, jnp.arange(s.n))
+
+    inv, orig_stat = _hoist_and_observe(stat)
+    normxm, y_full = inv["normxm"], inv["y_full"]
 
     n_perm_devices = int(np.prod([mesh.shape[a] for a in perm_axes]))
     if permutations % n_perm_devices:
@@ -190,7 +190,7 @@ def mantel_distributed(x: DistanceMatrix, y: DistanceMatrix, mesh,
 
         return jax.lax.map(one, orders)
 
-    f = jax.shard_map(
+    f = _shard_map(
         _local, mesh=mesh,
         in_specs=(P(), P(None, col_axis), P()),
         out_specs=P(perm_axes[0] if len(perm_axes) == 1 else perm_axes),

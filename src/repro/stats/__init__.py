@@ -1,0 +1,55 @@
+"""repro.stats — distance-matrix permutation tests on one shared engine.
+
+The paper (§4.2) accelerates the Mantel test by hoisting permutation-
+invariant work out of the Monte-Carlo loop and fusing the per-permutation
+remainder into a single pass over the matrix. This package applies that
+recipe to the whole family of tests that dominate microbiome workloads
+(cf. Sfiligoi et al. 2021, "Enabling microbiome research on personal
+devices"):
+
+* ``engine``         — the shared loop: ``Statistic`` protocol
+                       (hoist/per_perm split), batched ``lax.map``
+                       execution, p-value finishing, shard_map
+                       permutation-axis distribution.
+* ``permanova``      — pseudo-F from the centered Gower matrix
+                       (``SS_total = tr(G)`` hoisted; per-permutation
+                       gather-matmul).
+* ``anosim``         — Clarke's R with the rank transform hoisted.
+* ``partial_mantel`` — three-matrix partial correlation with ŷ
+                       residualized once and both inner products fused
+                       (optionally via the ``kernels.mantel_corr`` Pallas
+                       reduction).
+
+``core.mantel.mantel`` is a thin client of the same engine. Each test
+ships a deliberately eager ``*_ref`` oracle mirroring scikit-bio's
+multi-pass evaluation; ``benchmarks/bench_stats.py`` sweeps ref vs fused.
+"""
+
+from repro.stats.engine import (
+    PermutationTestResult,
+    Statistic,
+    permutation_orders,
+    permutation_test,
+    permutation_test_distributed,
+)
+from repro.stats.anosim import AnosimStatistic, anosim, anosim_ref
+from repro.stats.partial_mantel import (
+    PartialMantelPallasStatistic,
+    PartialMantelStatistic,
+    partial_mantel,
+    partial_mantel_ref,
+)
+from repro.stats.permanova import (
+    PermanovaStatistic,
+    permanova,
+    permanova_ref,
+)
+
+__all__ = [
+    "PermutationTestResult", "Statistic", "permutation_orders",
+    "permutation_test", "permutation_test_distributed",
+    "AnosimStatistic", "anosim", "anosim_ref",
+    "PartialMantelPallasStatistic", "PartialMantelStatistic",
+    "partial_mantel", "partial_mantel_ref",
+    "PermanovaStatistic", "permanova", "permanova_ref",
+]

@@ -1,0 +1,126 @@
+"""ANOSIM (Clarke 1993) on the hoisted-permutation engine.
+
+R = (mean between-group rank − mean within-group rank) / (n(n−1)/4), over
+the ranks of the condensed distances. The paper §4.2 split:
+
+* **hoisted** (computed once): the *ranks* — the expensive O(m log m) sort
+  happens exactly once, never per permutation — plus their square
+  symmetric form ``Rk`` (diag 0), the one-hot design ``Z``, the total rank
+  sum, and the within-pair count ``Σ_g n_g(n_g−1)/2`` (group sizes are
+  permutation-invariant, so both denominators are too).
+* **per permutation**: only the *within-group rank sum* changes. With
+  permuted design rows ``Z_p`` it is ``½ Σ_g (Z_pᵀ Rk Z_p)_gg`` — the same
+  one-pass gather-matmul shape as PERMANOVA's ``SS_among``; the between
+  sum falls out by subtraction from the hoisted total.
+
+``anosim_ref`` mirrors scikit-bio's eager evaluation: per permutation it
+rebuilds the within-pair boolean mask over all m = n(n−1)/2 pairs and
+takes two masked means — several full passes over the condensed vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.stats import rankdata
+
+from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
+from repro.stats import engine
+from repro.stats.engine import PermutationTestResult
+
+
+def _rank_average(v: jax.Array) -> jax.Array:
+    """scipy ``rankdata(method="average")``, via one sort + two binary
+    searches instead of ``jax.scipy.stats.rankdata``'s argsort path (~25%
+    cheaper at 2M elements — this is the fused test's dominant fixed
+    cost). Ranks are half-integers below 2²⁴, so the two agree bitwise."""
+    sv = jnp.sort(v)
+    lo = jnp.searchsorted(sv, v, side="left")
+    hi = jnp.searchsorted(sv, v, side="right")
+    return 0.5 * (lo + hi + 1).astype(v.dtype)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["dm", "grouping"], meta_fields=["n", "num_groups"])
+@dataclasses.dataclass
+class AnosimStatistic:
+    """Clarke's R with ranks hoisted out of the Monte-Carlo loop."""
+
+    dm: jax.Array          # (n, n) validated distance matrix
+    grouping: jax.Array    # (n,) int group codes in [0, num_groups)
+    n: int
+    num_groups: int
+
+    def hoist(self):
+        iu = np.triu_indices(self.n, k=1)
+        ranks = _rank_average(self.dm[iu])           # ranked exactly once
+        rank_full = condensed_to_square(ranks, self.n)
+        z = jax.nn.one_hot(self.grouping, self.num_groups,
+                           dtype=rank_full.dtype)
+        sizes = jnp.sum(z, axis=0)
+        m = self.n * (self.n - 1) / 2.0
+        return {"rank_full": rank_full, "z": z,
+                "total_sum": jnp.sum(ranks),
+                "within_count": jnp.sum(sizes * (sizes - 1)) / 2.0,
+                "between_count": m - jnp.sum(sizes * (sizes - 1)) / 2.0,
+                "divisor": self.n * (self.n - 1) / 4.0}
+
+    def per_perm(self, inv, order):
+        z = inv["z"][order]                          # O(n·k) label gather
+        w_sum = 0.5 * jnp.sum(z * (inv["rank_full"] @ z))
+        r_w = w_sum / inv["within_count"]
+        r_b = (inv["total_sum"] - w_sum) / inv["between_count"]
+        return (r_b - r_w) / inv["divisor"]
+
+
+def anosim(dm: DistanceMatrix, grouping, permutations: int = 999,
+           key: Optional[jax.Array] = None,
+           batch_size: int = 32) -> PermutationTestResult:
+    """Hoisted+fused ANOSIM; one-sided (greater), like scikit-bio.
+
+    Default batch 32 (vs mantel's 8): the per-perm operand here is the
+    (n, k) design, not an (n, n) gathered matrix, so a bigger batch
+    amortizes the rank-matrix read at negligible memory cost."""
+    codes, num_groups = engine.encode_grouping(grouping)
+    if codes.size != len(dm):
+        raise ValueError("grouping length does not match distance matrix")
+    stat = AnosimStatistic(dm.data, jnp.asarray(codes), len(dm), num_groups)
+    return engine.permutation_test(stat, permutations, key,
+                                   alternative="greater",
+                                   batch_size=batch_size)
+
+
+# --------------------------------------------------------------------------
+# Oracle — scikit-bio's evaluation order, deliberately eager and multi-pass
+# --------------------------------------------------------------------------
+def anosim_ref(dm: DistanceMatrix, grouping, permutations: int = 999,
+               key: Optional[jax.Array] = None) -> PermutationTestResult:
+    """Per permutation: rebuild the within mask over all pairs, then two
+    masked means — each an eager full-vector pass."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    codes, num_groups = engine.encode_grouping(grouping)
+    n = len(dm)
+    if codes.size != n:
+        raise ValueError("grouping length does not match distance matrix")
+    iu = np.triu_indices(n, k=1)
+    ranks = rankdata(dm.condensed_form())            # skbio also ranks once
+    divisor = n * (n - 1) / 4.0
+
+    def r_stat(order):
+        g_p = codes[np.asarray(order)]
+        within = jnp.asarray(g_p[iu[0]] == g_p[iu[1]])
+        w_n = jnp.sum(within)
+        r_w = jnp.sum(jnp.where(within, ranks, 0.0)) / w_n
+        r_b = jnp.sum(jnp.where(within, 0.0, ranks)) / (ranks.size - w_n)
+        return (r_b - r_w) / divisor
+
+    observed = r_stat(np.arange(n))
+    orders = np.asarray(engine.permutation_orders(key, permutations, n))
+    permuted = jnp.asarray([r_stat(orders[p]) for p in range(permutations)])
+    return engine.finish(observed, permuted, permutations, "greater", n)

@@ -1,0 +1,241 @@
+"""Shared permutation-test engine: paper §4.2's recipe, generalized.
+
+The paper's Mantel speedup (Algorithm 3 → Algorithm 5) is really two
+observations that apply to *every* distance-matrix permutation test:
+
+1. **hoist** — most of each Monte-Carlo iteration is permutation-invariant
+   (means, norms, ranks, the centered Gower matrix, group sizes). Compute
+   those exactly once, outside the loop.
+2. **fuse** — what remains per permutation should be a single pass over the
+   matrix (one gather+multiply-reduce, or one small gather-matmul), not a
+   chain of eager NumPy ops each costing a DRAM round-trip.
+
+This module owns the loop so each statistic only declares the split:
+
+* ``Statistic`` — the protocol: ``hoist() -> invariants`` runs once;
+  ``per_perm(invariants, order) -> scalar`` runs K times inside a batched
+  ``lax.map`` (and is auto-vmapped over each batch). Implementations are
+  ``jax.tree_util.register_dataclass`` pytrees so the jitted engine caches
+  its trace per statistic *class* (+ static metadata), not per call.
+  An optional ``per_batch(invariants, orders) -> (B,)`` hook lets a
+  statistic take over whole-batch execution (e.g. to route the reduction
+  through the Pallas kernel in ``repro.kernels.mantel_corr``).
+* ``permutation_test`` — permutation-order generation, batched execution,
+  p-value finishing. Clients: ``core.mantel.mantel``, ``stats.permanova``,
+  ``stats.anosim``, ``stats.partial_mantel``.
+* ``permutation_test_distributed`` — the permutation axis through
+  ``shard_map``, with a per-device ``fold_in`` exactly like
+  ``core.mantel.mantel_distributed`` so the null distribution is
+  mesh-shape-invariant (elastic-safe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:                                    # jax >= 0.6 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                  # this container's 0.4.x lineage
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+# --------------------------------------------------------------------------
+# Protocol
+# --------------------------------------------------------------------------
+@runtime_checkable
+class Statistic(Protocol):
+    """A permutation-test statistic, split at the paper's hoisting boundary.
+
+    ``n`` is the permutation domain size (number of samples). ``hoist``
+    returns a pytree of permutation-invariant values, computed once per
+    test; ``per_perm`` maps (invariants, order) to the scalar statistic and
+    must be the *only* work that scales with K. The observed statistic is
+    ``per_perm(invariants, identity)`` — one code path, no drift between
+    observed and null evaluation.
+    """
+
+    n: int
+
+    def hoist(self) -> Any: ...
+
+    def per_perm(self, invariants: Any, order: jax.Array) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PermutationTestResult:
+    """What every ``repro.stats`` test returns."""
+
+    statistic: float
+    p_value: float
+    sample_size: int
+    permutations: int
+
+
+# --------------------------------------------------------------------------
+# Pieces hoisted out of core/mantel.py (and generalized)
+# --------------------------------------------------------------------------
+def permutation_orders(key, permutations: int, n: int) -> jax.Array:
+    """(K, n) int array of independent uniform permutations of range(n).
+
+    One batched draw + one batched argsort (a random permutation is the
+    argsort of iid random words) — ~2x faster than K vmapped
+    ``random.permutation`` calls, which dispatch per-row threefry. A
+    32-bit tie (probability ~n²/2³³ per row) resolves by stable sort
+    order; at test resolution 1/(K+1) the bias is immaterial."""
+    words = jax.random.bits(key, (permutations, n), dtype=jnp.uint32)
+    return jnp.argsort(words, axis=-1)
+
+
+def count_better(orig_stat: jax.Array, permuted_stats: jax.Array,
+                 alternative: str) -> jax.Array:
+    """How many null draws are at least as extreme as the observed value."""
+    if alternative == "two-sided":
+        return jnp.sum(jnp.abs(permuted_stats) >= jnp.abs(orig_stat))
+    if alternative == "greater":
+        return jnp.sum(permuted_stats >= orig_stat)
+    if alternative == "less":
+        return jnp.sum(permuted_stats <= orig_stat)
+    raise ValueError(f"unknown alternative {alternative!r}")
+
+
+def finish(orig_stat, permuted_stats, permutations: int, alternative: str,
+           n: int) -> PermutationTestResult:
+    """Monte-Carlo p-value with the standard +1 correction. A NaN observed
+    statistic propagates to a NaN p-value — NaN comparisons are all False,
+    which would otherwise count zero exceedances and report the *most*
+    significant p possible for a degenerate input."""
+    c = count_better(orig_stat, permuted_stats, alternative)
+    p_value = (c + 1) / (permutations + 1)
+    orig_stat = float(orig_stat)
+    return PermutationTestResult(
+        orig_stat, float("nan") if np.isnan(orig_stat) else float(p_value),
+        n, permutations)
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("permutations", "batch_size"))
+def _null_distribution(stat, key, permutations: int, batch_size: int):
+    """observed statistic + (K,) null draws, one jit region.
+
+    ``stat`` is a pytree: its arrays are traced, its static metadata (n,
+    group count, …) keys the jit cache, so repeated tests of the same
+    shape reuse the compiled executable.
+    """
+    invariants = stat.hoist()                      # runs exactly once
+    observed = stat.per_perm(invariants, jnp.arange(stat.n))
+
+    orders = permutation_orders(key, permutations, stat.n)
+    per_batch = getattr(stat, "per_batch", None)
+    if per_batch is not None:
+        # full blocks stream through lax.map; a short trailing block (when
+        # batch_size doesn't divide K, e.g. the canonical 999) runs once
+        # more — the statistic's batch path is never silently bypassed.
+        full = (permutations // batch_size) * batch_size
+        parts = []
+        if full:
+            order_blocks = orders[:full].reshape(full // batch_size,
+                                                 batch_size, stat.n)
+            parts.append(jax.lax.map(lambda o: per_batch(invariants, o),
+                                     order_blocks).reshape(full))
+        if full < permutations:
+            parts.append(per_batch(invariants, orders[full:]))
+        permuted = (jnp.concatenate(parts) if parts
+                    else jnp.zeros((0,), dtype=observed.dtype))
+    else:
+        # lax.map auto-vmaps per_perm over each batch: the batched gathers
+        # + one fused reduce, with peak memory of one batch of matrices.
+        permuted = jax.lax.map(lambda o: stat.per_perm(invariants, o),
+                               orders, batch_size=batch_size)
+    return observed, permuted
+
+
+def permutation_test(stat: Statistic, permutations: int = 999,
+                     key: Optional[jax.Array] = None,
+                     alternative: str = "two-sided",
+                     batch_size: int = 8) -> PermutationTestResult:
+    """Run a hoisted+fused Monte-Carlo permutation test for ``stat``."""
+    if alternative not in ("two-sided", "greater", "less"):
+        raise ValueError(f"unknown alternative {alternative!r}")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    observed, permuted = _null_distribution(stat, key, permutations,
+                                            batch_size)
+    return finish(observed, permuted, permutations, alternative, stat.n)
+
+
+# --------------------------------------------------------------------------
+# Distributed engine — permutation axis through shard_map
+# --------------------------------------------------------------------------
+def permutation_test_distributed(stat: Statistic, mesh,
+                                 permutations: int = 1024,
+                                 key: Optional[jax.Array] = None,
+                                 alternative: str = "two-sided",
+                                 perm_axes=("data",),
+                                 batch_size: int = 8) -> PermutationTestResult:
+    """Permutation-parallel engine: K/|devices| permutations per device.
+
+    The invariants are hoisted once and replicated; each device draws its
+    own permutations via ``fold_in(key, device_index)`` — the same
+    elastic-safe construction as ``mantel_distributed``, so the global
+    null distribution does not depend on the mesh shape.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if alternative not in ("two-sided", "greater", "less"):
+        raise ValueError(f"unknown alternative {alternative!r}")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    n_perm_devices = int(np.prod([mesh.shape[a] for a in perm_axes]))
+    if permutations % n_perm_devices:
+        raise ValueError(f"permutations ({permutations}) must divide over "
+                         f"{n_perm_devices} devices")
+    per_dev = permutations // n_perm_devices
+
+    # hoist + observed in one jit region: the identity-order gathers fuse
+    # away instead of materializing full n×n copies eagerly
+    @jax.jit
+    def _hoist_and_observe(s):
+        inv = s.hoist()
+        return inv, s.per_perm(inv, jnp.arange(s.n))
+
+    invariants, observed = _hoist_and_observe(stat)
+
+    def _local(inv):
+        dev = 0                     # row-major rank over ALL perm axes, so
+        for a in perm_axes:         # no two devices fold_in the same index
+            dev = dev * mesh.shape[a] + jax.lax.axis_index(a)
+        k = jax.random.fold_in(key, dev)
+        orders = permutation_orders(k, per_dev, stat.n)
+        return jax.lax.map(lambda o: stat.per_perm(inv, o), orders,
+                           batch_size=min(batch_size, per_dev))
+
+    f = _shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(),),                           # invariants replicated
+        out_specs=P(perm_axes[0] if len(perm_axes) == 1 else perm_axes),
+    )
+    permuted = f(invariants)
+    return finish(observed, permuted, permutations, alternative, stat.n)
+
+
+# --------------------------------------------------------------------------
+# Shared helpers for grouping-based statistics (PERMANOVA, ANOSIM)
+# --------------------------------------------------------------------------
+def encode_grouping(grouping) -> tuple[np.ndarray, int]:
+    """Map arbitrary hashable labels to int codes in [0, num_groups)."""
+    codes = np.unique(np.asarray(grouping), return_inverse=True)[1]
+    num_groups = int(codes.max()) + 1
+    if num_groups < 2:
+        raise ValueError("grouping must contain at least two groups")
+    if num_groups == codes.size:
+        raise ValueError("grouping must have at least one group of size > 1")
+    return codes.astype(np.int32), num_groups

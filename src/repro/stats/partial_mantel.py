@@ -1,0 +1,187 @@
+"""Partial Mantel test (Smouse, Long & Sokal 1986) on the hoisted engine.
+
+Correlates distance matrices x and y while controlling for a third matrix
+z: the statistic is the first-order partial correlation
+
+    r_xy·z = (r_xy − r_yz·r_xz) / √((1 − r_xz²)(1 − r_yz²))
+
+under row/column permutations of x only. The paper §4.2 split is richer
+here than for the plain Mantel test:
+
+* **hoisted** (computed once): x̄ and ‖x−x̄‖; the centered-normalized ŷ
+  and ẑ; ``r_yz`` (y and z are never permuted, so it is a constant of the
+  null distribution!); and the *residualized* numerator matrix
+  ``ŷ_res = (ŷ − r_yz·ẑ)/√(1−r_yz²)`` — the regression of ŷ on ẑ is done
+  exactly once, not per permutation.
+* **per permutation**: two fused gather-multiply-reduces over the same
+  permuted X — ``⟨x_p, ŷ_res⟩`` (the numerator, pre-residualized) and
+  ``⟨x_p, ẑ⟩`` (= r_xz) — then a scalar finish ``num/√(1−r_xz²)``. Both
+  inner products use Mantel's Σŷ=0 algebra (the mean term vanishes), so
+  each is exactly the reduction ``kernels.mantel_corr`` implements;
+  ``PartialMantelPallasStatistic.per_batch`` routes them through that
+  Pallas kernel with Ŷ-tile reuse across the batch.
+
+``partial_mantel_ref`` mirrors the classical eager evaluation (vegan /
+scikit-bio style): per permutation it materializes the permuted condensed
+x and calls black-box multi-pass ``pearsonr`` three times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
+from repro.kernels.mantel_corr import mantel_corr
+from repro.stats import engine
+from repro.stats.engine import PermutationTestResult
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["x", "y", "z"], meta_fields=["n"])
+@dataclasses.dataclass
+class PartialMantelStatistic:
+    """r_xy·z with ŷ residualized against ẑ once, outside the loop."""
+
+    x: jax.Array           # (n, n) permuted matrix
+    y: jax.Array           # (n, n) held fixed
+    z: jax.Array           # (n, n) held fixed (the control)
+    n: int
+
+    def hoist(self):
+        iu = np.triu_indices(self.n, k=1)
+        x_flat = self.x[iu]
+        xm = x_flat - x_flat.mean()
+        normxm = jnp.linalg.norm(xm)
+
+        def _hat(mat):
+            flat = mat[iu]
+            centered = flat - flat.mean()
+            return centered / jnp.linalg.norm(centered)
+
+        yhat, zhat = _hat(self.y), _hat(self.z)
+        r_yz = jnp.dot(yhat, zhat)                   # permutation-invariant
+        y_res = (yhat - r_yz * zhat) / jnp.sqrt(1.0 - r_yz * r_yz)
+        return {"normxm": normxm, "r_yz": r_yz,
+                "y_res_full": condensed_to_square(y_res, self.n),
+                "z_full": condensed_to_square(zhat, self.n)}
+
+    def per_perm(self, inv, order):
+        xp = self.x[order][:, order]                 # contiguous row gathers
+        scale = 2.0 * inv["normxm"]                  # Σŷ_res = Σẑ = 0
+        num = jnp.vdot(xp, inv["y_res_full"]) / scale
+        r_xz = jnp.vdot(xp, inv["z_full"]) / scale
+        return num / jnp.sqrt(1.0 - r_xz * r_xz)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["x", "y", "z"],
+         meta_fields=["n", "block", "interpret"])
+@dataclasses.dataclass
+class PartialMantelPallasStatistic(PartialMantelStatistic):
+    """Same statistic; per-batch path through ``kernels.mantel_corr``."""
+
+    block: int = 256
+    interpret: bool = True
+
+    def _tile(self):
+        # pad n to the next multiple of 8 *before* choosing the tile, so a
+        # small n never ends up with pad ≈ b−1 (e.g. n=100 now tiles as one
+        # 104-block with pad 4, not 96-blocks with pad 92 → ~4x the work)
+        padded = ((self.n + 7) // 8) * 8
+        b = max(min(self.block, padded) // 8 * 8, 8)
+        padded = -(-padded // b) * b
+        return b, padded - self.n
+
+    def hoist(self):
+        # the padded ŷ_res/ẑ are permutation-invariant too — pad once here,
+        # not inside the per-batch loop body
+        inv = super().hoist()
+        _, pad = self._tile()
+        widths = ((0, pad), (0, pad))
+        inv["y_res_pad"] = jnp.pad(inv["y_res_full"], widths) if pad \
+            else inv["y_res_full"]
+        inv["z_pad"] = jnp.pad(inv["z_full"], widths) if pad \
+            else inv["z_full"]
+        return inv
+
+    def per_batch(self, inv, orders):
+        b, pad = self._tile()
+        xp = jax.vmap(lambda o: self.x[o][:, o])(orders)
+        if pad:
+            xp = jnp.pad(xp, ((0, 0), (0, pad), (0, pad)))
+        scale = 2.0 * inv["normxm"]
+        corr = partial(mantel_corr, block_m=b, block_n=b,
+                       interpret=self.interpret)
+        num = corr(xp, inv["y_res_pad"]) / scale     # two fused reductions
+        r_xz = corr(xp, inv["z_pad"]) / scale        # over one gathered Xp
+        return num / jnp.sqrt(1.0 - r_xz * r_xz)
+
+
+def partial_mantel(x: DistanceMatrix, y: DistanceMatrix, z: DistanceMatrix,
+                   permutations: int = 999,
+                   key: Optional[jax.Array] = None,
+                   alternative: str = "two-sided",
+                   batch_size: int = 8,
+                   kernel: str = "xla") -> PermutationTestResult:
+    """Hoisted+fused partial Mantel. ``kernel="pallas"`` routes the two
+    inner products through the batched Pallas reduction (interpret mode on
+    CPU; the TPU-native path at scale)."""
+    if not (len(x) == len(y) == len(z)):
+        raise ValueError("x, y and z must have the same shape")
+    # eager degeneracy check (can't raise inside the jitted hoist): |r_yz|→1
+    # makes the residualization 0/0 and the whole null distribution NaN
+    from repro.core.mantel import pearsonr_ref
+    r_yz = float(pearsonr_ref(y.condensed_form(), z.condensed_form()))
+    if 1.0 - r_yz * r_yz < 1e-6:
+        raise ValueError(
+            f"y and z are (nearly) collinear (r_yz={r_yz:.6f}); the partial "
+            f"correlation is undefined — use the plain Mantel test")
+    if kernel == "pallas":
+        stat = PartialMantelPallasStatistic(x.data, y.data, z.data, len(x))
+    elif kernel == "xla":
+        stat = PartialMantelStatistic(x.data, y.data, z.data, len(x))
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    return engine.permutation_test(stat, permutations, key, alternative,
+                                   batch_size)
+
+
+# --------------------------------------------------------------------------
+# Oracle — eager multi-pass evaluation, black-box pearsonr per permutation
+# --------------------------------------------------------------------------
+def partial_mantel_ref(x: DistanceMatrix, y: DistanceMatrix,
+                       z: DistanceMatrix, permutations: int = 999,
+                       key: Optional[jax.Array] = None,
+                       alternative: str = "two-sided"
+                       ) -> PermutationTestResult:
+    """Per permutation: materialize the permuted condensed x and call
+    multi-pass ``pearsonr`` three times (r_xy, r_xz and — wastefully —
+    r_yz, which never changes)."""
+    # deferred: core.mantel is an engine client, so a top-level import here
+    # would close the stats ↔ core.mantel cycle during package init
+    from repro.core.mantel import pearsonr_ref
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = len(x)
+    y_flat = y.condensed_form()
+    z_flat = z.condensed_form()
+
+    def r_partial(x_flat):
+        r_xy = pearsonr_ref(x_flat, y_flat)
+        r_xz = pearsonr_ref(x_flat, z_flat)
+        r_yz = pearsonr_ref(y_flat, z_flat)          # recomputed every time
+        return ((r_xy - r_yz * r_xz)
+                / jnp.sqrt((1.0 - r_xz ** 2) * (1.0 - r_yz ** 2)))
+
+    observed = r_partial(x.condensed_form())
+    orders = engine.permutation_orders(key, permutations, n)
+    permuted = jnp.stack([
+        r_partial(x.permute(np.asarray(orders[p]), condensed=True))
+        for p in range(permutations)])
+    return engine.finish(observed, permuted, permutations, alternative, n)

@@ -36,6 +36,17 @@ def test_center_blocked_equals_fused():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,block", [(100, 32), (65, 64), (33, 64), (7, 4)])
+def test_center_blocked_pads_non_multiple_n(n, block):
+    """Regression: n % block != 0 must go through the *blocked* path (padded
+    trailing block), not silently fall back to the unblocked one."""
+    dm = random_distance_matrix(jax.random.PRNGKey(n), n).data
+    got = center_distance_matrix_blocked(dm, block=block)
+    assert got.shape == (n, n)
+    np.testing.assert_allclose(got, center_distance_matrix(dm),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_centered_matrix_is_gower():
     """Row and column means of the centered matrix must vanish."""
     dm = random_distance_matrix(jax.random.PRNGKey(1), 96).data

@@ -1,0 +1,234 @@
+"""repro.stats subsystem tests: engine protocol, each fused statistic vs
+its eager scikit-bio-style oracle (statistic AND p-value, same PRNG key),
+the refactored core.mantel engine path, and the distributed engine."""
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mantel, mantel_ref, random_distance_matrix
+from repro.core.mantel import MantelStatistic
+from repro.stats import (anosim, anosim_ref, partial_mantel,
+                         partial_mantel_ref, permanova, permanova_ref,
+                         permutation_test, permutation_test_distributed)
+from repro.stats.engine import encode_grouping, permutation_orders
+from repro.stats.permanova import PermanovaStatistic
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _dm(seed, n=36):
+    return random_distance_matrix(jax.random.PRNGKey(seed), n)
+
+
+def _grouping(n=36, k=3):
+    return np.array([i % k for i in range(n)])
+
+
+# --------------------------------------------------------------------------
+# engine: the refactored mantel path is pinned against the oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("alternative", ["two-sided", "greater", "less"])
+def test_mantel_engine_matches_ref_all_alternatives(alternative):
+    """Same key ⇒ identical permutations ⇒ identical p-value, any tail."""
+    x, y = _dm(0), _dm(1)
+    s_opt, p_opt, n_opt = mantel(x, y, permutations=48, key=KEY,
+                                 alternative=alternative)
+    s_ref, p_ref, n_ref = mantel_ref(x, y, permutations=48, key=KEY,
+                                     alternative=alternative)
+    assert abs(s_opt - s_ref) < 1e-5
+    assert abs(p_opt - p_ref) < 1e-9
+    assert n_opt == n_ref == 36
+
+
+def test_engine_runs_custom_statistic():
+    """The protocol is pluggable: a toy statistic goes through unchanged."""
+
+    @partial(jax.tree_util.register_dataclass,
+             data_fields=["v"], meta_fields=["n"])
+    @dataclasses.dataclass
+    class FirstElement:
+        v: jax.Array
+        n: int
+
+        def hoist(self):
+            return {"v": self.v}
+
+        def per_perm(self, inv, order):
+            return inv["v"][order[0]]
+
+    v = jnp.arange(10.0)
+    r = permutation_test(FirstElement(v, 10), permutations=33, key=KEY)
+    assert r.statistic == 0.0                      # identity order → v[0]
+    assert 0.0 < r.p_value <= 1.0
+    assert r.sample_size == 10 and r.permutations == 33
+
+
+def test_engine_rejects_bad_alternative():
+    x, y = _dm(0), _dm(1)
+    with pytest.raises(ValueError):
+        mantel(x, y, permutations=4, alternative="bogus")
+    with pytest.raises(ValueError):
+        permutation_test(MantelStatistic(x.data, y.data, len(x)),
+                         permutations=4, alternative="bogus")
+
+
+def test_encode_grouping():
+    codes, k = encode_grouping(["a", "b", "a", "c", "b", "a"])
+    assert k == 3
+    assert codes.tolist() == [0, 1, 0, 2, 1, 0]
+    with pytest.raises(ValueError):
+        encode_grouping(["a", "a", "a"])           # one group
+    with pytest.raises(ValueError):
+        encode_grouping(["a", "b", "c"])           # all singletons
+
+
+# --------------------------------------------------------------------------
+# permanova
+# --------------------------------------------------------------------------
+def test_permanova_fused_matches_ref():
+    dm, g = _dm(2), _grouping()
+    got = permanova(dm, g, permutations=99, key=KEY)
+    want = permanova_ref(dm, g, permutations=99, key=KEY)
+    assert abs(got.statistic - want.statistic) < 1e-5
+    assert abs(got.p_value - want.p_value) < 1e-9
+
+
+def test_permanova_detects_group_structure():
+    """Points drawn around well-separated group centroids ⇒ huge F, p→min."""
+    key = jax.random.PRNGKey(3)
+    n, k = 45, 3
+    g = _grouping(n, k)
+    centers = 25.0 * jax.random.normal(key, (k, 4))
+    pts = centers[g] + jax.random.normal(jax.random.fold_in(key, 1), (n, 4))
+    d = jnp.sqrt(jnp.maximum(
+        jnp.sum((pts[:, None] - pts[None, :]) ** 2, -1), 0))
+    d = 0.5 * (d + d.T)
+    from repro.core import DistanceMatrix
+    dm = DistanceMatrix(d - jnp.diag(jnp.diag(d)), _skip_validation=True)
+    r = permanova(dm, g, permutations=99, key=KEY)
+    assert r.statistic > 50.0
+    assert r.p_value == pytest.approx(1 / 100)
+    # and no structure ⇒ F near 1, p not extreme
+    r0 = permanova(_dm(4, n), g, permutations=99, key=KEY)
+    assert r0.p_value > 0.05
+
+
+def test_permanova_string_labels_and_validation():
+    dm = _dm(5)
+    labels = ["ctl" if i % 3 else "trt" for i in range(36)]
+    r = permanova(dm, labels, permutations=49, key=KEY)
+    assert 0.0 < r.p_value <= 1.0
+    with pytest.raises(ValueError):
+        permanova(dm, _grouping(12), permutations=9)   # length mismatch
+
+
+# --------------------------------------------------------------------------
+# anosim
+# --------------------------------------------------------------------------
+def test_anosim_fused_matches_ref():
+    dm, g = _dm(6), _grouping()
+    got = anosim(dm, g, permutations=99, key=KEY)
+    want = anosim_ref(dm, g, permutations=99, key=KEY)
+    assert abs(got.statistic - want.statistic) < 1e-5
+    assert abs(got.p_value - want.p_value) < 1e-9
+
+
+def test_anosim_r_range_and_structure():
+    """R ∈ [−1, 1]; separated groups ⇒ R → 1 with minimal p."""
+    key = jax.random.PRNGKey(8)
+    n, k = 40, 4
+    g = _grouping(n, k)
+    centers = 50.0 * jax.random.normal(key, (k, 3))
+    pts = centers[g] + jax.random.normal(jax.random.fold_in(key, 1), (n, 3))
+    d = jnp.sqrt(jnp.maximum(
+        jnp.sum((pts[:, None] - pts[None, :]) ** 2, -1), 0))
+    d = 0.5 * (d + d.T)
+    from repro.core import DistanceMatrix
+    dm = DistanceMatrix(d - jnp.diag(jnp.diag(d)), _skip_validation=True)
+    r = anosim(dm, g, permutations=99, key=KEY)
+    assert 0.9 < r.statistic <= 1.0
+    assert r.p_value == pytest.approx(1 / 100)
+    r0 = anosim(_dm(9, n), g, permutations=99, key=KEY)
+    assert -1.0 <= r0.statistic <= 1.0
+
+
+# --------------------------------------------------------------------------
+# partial mantel
+# --------------------------------------------------------------------------
+def test_partial_mantel_fused_matches_ref():
+    x, y, z = _dm(10), _dm(11), _dm(12)
+    got = partial_mantel(x, y, z, permutations=48, key=KEY)
+    want = partial_mantel_ref(x, y, z, permutations=48, key=KEY)
+    assert abs(got.statistic - want.statistic) < 1e-5
+    assert abs(got.p_value - want.p_value) < 1e-9
+
+
+def test_partial_mantel_pallas_kernel_path():
+    """The per-batch route through kernels.mantel_corr gives the same test.
+
+    K=35 with the default batch of 8 leaves a remainder block of 3: the
+    engine must still route every permutation through per_batch."""
+    x, y, z = _dm(13, 24), _dm(14, 24), _dm(15, 24)
+    xla = partial_mantel(x, y, z, permutations=35, key=KEY, kernel="xla")
+    pal = partial_mantel(x, y, z, permutations=35, key=KEY, kernel="pallas")
+    assert abs(xla.statistic - pal.statistic) < 1e-5
+    assert abs(xla.p_value - pal.p_value) < 1e-9
+    with pytest.raises(ValueError):
+        partial_mantel(x, y, z, permutations=8, kernel="cuda")
+
+
+def test_partial_mantel_rejects_collinear_control():
+    """z == y makes the residualization 0/0 — must raise, not report the
+    most significant p-value via NaN comparisons."""
+    x, y = _dm(20), _dm(21)
+    with pytest.raises(ValueError, match="collinear"):
+        partial_mantel(x, y, y, permutations=9)
+
+
+def test_partial_mantel_controls_for_confounder():
+    """y == x ⇒ partial r stays ~1 whatever z; controlling x's own driver
+    z == x must *not* report spurious correlation against independent y."""
+    x, z = _dm(16), _dm(17)
+    r_same = partial_mantel(x, x, z, permutations=32, key=KEY)
+    assert r_same.statistic > 0.99
+    y_indep = _dm(18)
+    r_ctl = partial_mantel(x, y_indep, x, permutations=99, key=KEY)
+    assert abs(r_ctl.statistic) < 0.2
+    assert r_ctl.p_value > 0.01
+
+
+# --------------------------------------------------------------------------
+# distributed engine (1-device mesh on CPU: exercises the shard_map path)
+# --------------------------------------------------------------------------
+def test_engine_distributed_single_device_mesh():
+    from jax.sharding import Mesh
+
+    n = 32
+    dm = _dm(19, n)
+    codes, k = encode_grouping(_grouping(n, 4))
+    stat = PermanovaStatistic(dm.data, jnp.asarray(codes), n, k)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    r = permutation_test_distributed(stat, mesh, permutations=64, key=KEY,
+                                     alternative="greater")
+    r_host = permutation_test(stat, permutations=64, key=KEY,
+                              alternative="greater")
+    # same observed statistic; the null draws differ (per-device fold_in)
+    assert abs(r.statistic - r_host.statistic) < 1e-5
+    assert 0.0 < r.p_value <= 1.0
+    assert r.permutations == 64
+    with pytest.raises(ValueError):
+        permutation_test_distributed(stat, mesh, permutations=64,
+                                     alternative="bogus")
+
+
+def test_permutation_orders_deterministic():
+    a = permutation_orders(KEY, 5, 12)
+    b = permutation_orders(KEY, 5, 12)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for row in np.asarray(a):
+        assert sorted(row.tolist()) == list(range(12))
