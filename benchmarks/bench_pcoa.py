@@ -1,6 +1,16 @@
-"""Paper §4.1 end-to-end: pcoa with original vs fused centering, plus the
-validation-caching effect (pcoa internally copies its DistanceMatrix —
-paper §4.3 last paragraph)."""
+"""Paper §4.1 end-to-end: pcoa benchmarks.
+
+``run``       — the paper-suite rows: materialized fsvd with original vs
+                fused centering, plus the validation-caching effect (pcoa
+                internally copies its DistanceMatrix — paper §4.3).
+``run_suite`` — the PR 2 ordination sweep (``--suite pcoa``): ref-centred
+                vs fused-centred (both materialize-then-solve) vs the
+                matrix-free operator path, recording wall time and peak
+                matrix bytes to ``BENCH_pcoa.json`` so the perf trajectory
+                has a PCoA artifact alongside ``BENCH_stats.json``.
+"""
+
+import json
 
 import jax
 
@@ -8,20 +18,34 @@ from benchmarks.common import row, time_fn
 from repro.core.distance_matrix import DistanceMatrix, random_distance_matrix
 from repro.core.pcoa import pcoa
 
+_MATVEC_BLOCK = 256
+
+
+def _live_bytes() -> int:
+    """Bytes held by live jax arrays right now (committed buffers only)."""
+    return sum(int(a.nbytes) for a in jax.live_arrays())
+
+
+def _device_peak_bytes():
+    """Allocator high-water mark where the backend exposes one (TPU/GPU);
+    None on this container's CPU backend."""
+    stats = jax.devices()[0].memory_stats() or {}
+    return stats.get("peak_bytes_in_use")
+
 
 def run(sizes=(2048, 4096)):
-    print("\n# §4.1 — pcoa end-to-end (fsvd, k=10)")
+    print("\n# §4.1 — pcoa end-to-end (fsvd, k=10, materialized baseline)")
     results = {}
     for n in sizes:
         dm = random_distance_matrix(jax.random.PRNGKey(n), n, dim=8)
         # PCoAResults is not a pytree — block on the coordinates explicitly
         t_ref = time_fn(
-            lambda d: pcoa(d, centering_impl="ref").coordinates, dm,
-            repeats=2)
+            lambda d: pcoa(d, centering_impl="ref",
+                           materialize=True).coordinates, dm, repeats=2)
         row("pcoa", "pcoa_fsvd", "orig-ctr", n, t_ref)
         t_fused = time_fn(
-            lambda d: pcoa(d, centering_impl="fused").coordinates, dm,
-            repeats=2)
+            lambda d: pcoa(d, centering_impl="fused",
+                           materialize=True).coordinates, dm, repeats=2)
         row("pcoa", "pcoa_fsvd", "fused-ctr", n, t_fused, baseline=t_ref)
         results[n] = {"original": t_ref, "fused": t_fused}
 
@@ -36,5 +60,69 @@ def run(sizes=(2048, 4096)):
     return results
 
 
+def run_suite(sizes=(2048, 4096), dimensions=10,
+              out_json="BENCH_pcoa.json"):
+    """ref vs fused vs matrix-free ordination at each n.
+
+    ``peak_matrix_bytes`` is the analytic high-water of matrix-sized
+    buffers each path holds at once (fp32): the materialized paths keep D
+    *and* the centered F (the ref centering adds a full E intermediate on
+    top); the operator path keeps D plus one (block, n) row strip — the
+    whole point of the refactor. ``live_bytes`` / ``device_peak_bytes``
+    record the measured counterparts where the runtime exposes them.
+    """
+    print(f"\n# --suite pcoa — ordination: materialized vs matrix-free "
+          f"(fsvd, k={dimensions})")
+    results = {}
+    for n in sizes:
+        dm = random_distance_matrix(jax.random.PRNGKey(n), n, dim=8)
+        nn = 4 * n * n                       # one fp32 n×n matrix
+        strip = 4 * min(_MATVEC_BLOCK, n) * n
+        cases = {
+            # eager centering materializes E and F on top of D
+            "ref": (dict(centering_impl="ref", materialize=True), 3 * nn),
+            # fused centering writes F once; D + F coexist for the solve
+            "fused": (dict(centering_impl="fused", materialize=True),
+                      2 * nn),
+            # operator path: D plus one (block, n) strip, never F
+            "matrix-free": (dict(materialize=False, block=_MATVEC_BLOCK),
+                            nn + strip),
+        }
+        results[n] = {}
+        base = None
+        for name, (kw, peak) in cases.items():
+            t = time_fn(lambda: pcoa(dm, dimensions=dimensions,
+                                     **kw).coordinates, repeats=3)
+            row("pcoa", f"pcoa_k{dimensions}", name, n, t, baseline=base)
+            base = base or t
+            results[n][name] = {
+                "seconds": t,
+                "peak_matrix_bytes": peak,
+                "live_bytes": _live_bytes(),
+                "device_peak_bytes": _device_peak_bytes(),
+            }
+        r = results[n]
+        r["matrix-free"]["speedup_vs_fused"] = \
+            r["fused"]["seconds"] / r["matrix-free"]["seconds"]
+        r["matrix-free"]["matrix_bytes_vs_fused"] = \
+            r["matrix-free"]["peak_matrix_bytes"] / r["fused"]["peak_matrix_bytes"]
+
+    if out_json:
+        artifact = {
+            "suite": "pcoa",
+            "dimensions": dimensions,
+            "matvec_block": _MATVEC_BLOCK,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "results": {str(n): r for n, r in results.items()},
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results
+
+
 if __name__ == "__main__":
     run()
+    run_suite()

@@ -11,6 +11,9 @@ Suites:
     summary — measured speedups vs the paper's claimed ranges
   stats — the repro.stats subsystem (PERMANOVA / ANOSIM / partial Mantel,
     ref vs fused at n ∈ {512, 2048}, K=999); writes BENCH_stats.json.
+  pcoa — ordination: ref/fused materialize-then-solve vs the matrix-free
+    operator path at n ∈ {2048, 4096}; writes BENCH_pcoa.json with wall
+    time and peak matrix bytes.
 """
 
 import argparse
@@ -26,8 +29,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes / fewer repeats")
-    ap.add_argument("--suite", default="paper", choices=("paper", "stats"),
-                    help="paper tables (default) or the repro.stats sweep")
+    ap.add_argument("--suite", default="paper",
+                    choices=("paper", "stats", "pcoa"),
+                    help="paper tables (default), the repro.stats sweep, "
+                         "or the matrix-free ordination sweep")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -35,6 +40,21 @@ def main() -> None:
     print("# paper: Sfiligoi/McDonald/Knight PEARC'21 — sizes scaled to "
           "one CPU core; the measured quantity is the fused-vs-multipass "
           "RATIO (see EXPERIMENTS.md §Benchmarks)")
+
+    if args.suite == "pcoa":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size trajectory file
+            s = bench_pcoa.run_suite(sizes=(512, 1024),
+                                     out_json="BENCH_pcoa_fast.json")
+        else:
+            s = bench_pcoa.run_suite()
+        print("\n# summary — matrix-free vs materialize-then-solve (fused)")
+        for n, per_impl in s.items():
+            mf = per_impl["matrix-free"]
+            print(f"pcoa            n={n:<6d} {mf['speedup_vs_fused']:6.2f}x "
+                  f"wall, {mf['matrix_bytes_vs_fused']:.2f}x matrix bytes")
+        return
 
     if args.suite == "stats":
         if args.fast:

@@ -6,10 +6,18 @@ runs the full battery on one simulated study — the personal-device-scale
 analysis of Sfiligoi et al. 2021:
 
     samples from 4 "treatment" groups, two metrics + one confounder
+      → PCoA        where do the samples sit?    (matrix-free ordination)
       → PERMANOVA   do group centroids differ?        (pseudo-F)
+      → PERMDISP    ...or is it just unequal spread?  (dispersion F)
       → ANOSIM      do within < between distances?    (Clarke's R)
       → Mantel      do the two metrics agree?         (Pearson r)
       → partial Mantel   ...controlling for the confounding gradient?
+
+PCoA runs matrix-free through ``core.operators.CenteredGramOperator`` —
+the n×n Gower matrix is never materialized, which is what lets the
+large-cohort sizes fit on a personal device — and PERMDISP reuses those
+same coordinates as its hoisted invariant (a significant PERMANOVA with a
+significant PERMDISP warns that location and dispersion are confounded).
 
     PYTHONPATH=src python examples/community_analysis.py [--n 2048]
 
@@ -27,8 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DistanceMatrix, mantel
-from repro.stats import anosim, partial_mantel, permanova
+from repro.core import DistanceMatrix, mantel, pcoa
+from repro.stats import anosim, partial_mantel, permanova, permdisp
 
 
 def _euclidean_dm(pts):
@@ -66,28 +74,41 @@ def main(n: int = 2048, permutations: int = 999):
     print(f"== community analysis: {n} samples, 4 groups, K={permutations} ==")
 
     t0 = time.perf_counter()
+    ord_ = pcoa(metric_a, dimensions=3)          # matrix-free by default
+    jax.block_until_ready(ord_.coordinates)
+    pe = np.asarray(ord_.proportion_explained)
+    print(f"[0] PCoA (matrix-free)  top-3 axes explain "
+          f"{100 * pe.sum():.1f}% of inertia "
+          f"({time.perf_counter() - t0:.2f}s, no n² intermediate)")
+
+    t0 = time.perf_counter()
     r = permanova(metric_a, grouping, permutations, test_key)
     print(f"[1] PERMANOVA      F={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
     t0 = time.perf_counter()
+    r = permdisp(metric_a, grouping, permutations, test_key, dimensions=10)
+    print(f"[2] PERMDISP       F={r.statistic:8.3f}  p={r.p_value:.4f}  "
+          f"({time.perf_counter() - t0:.2f}s) — location vs spread check")
+
+    t0 = time.perf_counter()
     r = anosim(metric_a, grouping, permutations, test_key)
-    print(f"[2] ANOSIM         R={r.statistic:8.3f}  p={r.p_value:.4f}  "
+    print(f"[3] ANOSIM         R={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
     t0 = time.perf_counter()
     s, p, _ = mantel(metric_a, metric_b, permutations, test_key)
-    print(f"[3] Mantel A~B     r={s:8.3f}  p={p:.4f}  "
+    print(f"[4] Mantel A~B     r={s:8.3f}  p={p:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
     t0 = time.perf_counter()
     s, p, _ = mantel(metric_a, confounder, permutations, test_key)
-    print(f"[4] Mantel A~env   r={s:8.3f}  p={p:.4f}  "
+    print(f"[5] Mantel A~env   r={s:8.3f}  p={p:.4f}  "
           f"({time.perf_counter() - t0:.2f}s) — the confounded read")
 
     t0 = time.perf_counter()
     r = partial_mantel(metric_a, metric_b, confounder, permutations, test_key)
-    print(f"[5] partial A~B|env r={r.statistic:7.3f}  p={r.p_value:.4f}  "
+    print(f"[6] partial A~B|env r={r.statistic:7.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s) — agreement survives the "
           f"control")
     print("== analysis complete ==")

@@ -21,6 +21,10 @@ from repro.core.centering import (
     center_distance_matrix_distributed,
     center_distance_matrix_ref,
 )
+from repro.core.operators import (
+    CenteredGramOperator,
+    centered_gram_matvec_distributed,
+)
 from repro.core.mantel import mantel, mantel_distributed, mantel_ref, pearsonr_ref
 from repro.core.pcoa import PCoAResults, pcoa
 
@@ -31,6 +35,7 @@ __all__ = [
     "is_symmetric_and_hollow_ref",
     "center_distance_matrix", "center_distance_matrix_blocked",
     "center_distance_matrix_distributed", "center_distance_matrix_ref",
+    "CenteredGramOperator", "centered_gram_matvec_distributed",
     "mantel", "mantel_distributed", "mantel_ref", "pearsonr_ref",
     "PCoAResults", "pcoa",
 ]

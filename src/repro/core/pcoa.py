@@ -1,20 +1,41 @@
-"""Principal Coordinates Analysis: paper §4.1.
+"""Principal Coordinates Analysis: paper §4.1, operator-based.
 
-``pcoa = centering + eigendecomposition``. The paper's finding was that the
-*centering* dominated runtime in the original scikit-bio implementation; the
-eigensolver is the randomized method of Halko et al. 2011 (scikit-bio's
-``method="fsvd"``). We reproduce both halves:
+``pcoa = centering + eigendecomposition`` — and since PR 2 the two halves
+are *fused*: the default path never materializes the Gower-centered matrix
+at all. The paper's finding was that centering dominated runtime because it
+is pure off-chip traffic; the operator architecture finishes that argument
+by deleting the n² write (and the solver's k re-reads) entirely:
 
-* centering through ``core.centering`` (ref / fused / distributed);
-* ``method="eigh"`` — exact symmetric eigendecomposition (the oracle);
+* ``core.operators.CenteredGramOperator`` hoists the row/global means of
+  ``E = −½D∘D`` in one read of D and applies
+  ``F @ X = E@X − r(1ᵀX) − 1(rᵀX) + m·1(1ᵀX)`` to skinny (n, k+p) blocks,
+  with the E-formation fused into each row-blocked matmul (XLA) or
+  VMEM-tiled in-register (``kernels.center_matvec``, ``matvec_impl=
+  "pallas"``). Sfiligoi et al. 2021 ("Enabling microbiome research on
+  personal devices") make the same point from the footprint side: dropping
+  the materialized intermediate is what lets large-cohort ordination fit
+  on small machines.
 * ``method="fsvd"`` — randomized range-finder with power iterations
-  (Halko et al. 2011, Algs. 4.3/5.3), all matmuls pjit-shardable so the
-  solver scales with the mesh.
+  (Halko et al. 2011, Algs. 4.3/5.3) driven entirely through
+  ``operator.matvec``; ``materialize=True`` restores the old
+  materialize-then-solve path (the perf baseline in ``--suite pcoa``).
+* ``method="eigh"`` — exact symmetric eigendecomposition: the oracle. It
+  needs the full matrix, so it always materializes (via ``centering_impl``:
+  "ref" / "fused" / "distributed").
+* ``centering_impl="distributed"`` with ``materialize=False`` routes each
+  matvec through the shard_map mesh layout of ``core.centering``
+  (``operators.centered_gram_matvec_distributed``) — no n² tensor crosses
+  the interconnect, or even exists per device beyond the D blocks.
 
 Output mirrors scikit-bio's ``OrdinationResults``: coordinates scaled by
-√λ, eigenvalues, and the proportion of variance explained (negative
-eigenvalues — which Gower centering of non-Euclidean distances can produce —
-are clamped to zero for the proportions, as scikit-bio does).
+√λ, eigenvalues, and the proportion of variance explained. Convention for
+non-Euclidean distances (which Gower centering can take to negative
+eigenvalues): the numerator clamps negative eigenvalues to zero, as
+scikit-bio does, while the denominator is the **exact** total inertia
+``Σλ = tr(F)`` from ``operator.trace()`` — previously a materialized
+``jnp.trace`` whose ``total <= 0`` fallback silently renormalized by only
+the top-k inertia. ``tr(F) ≥ 0`` always (E ≤ 0 entrywise), with equality
+only for the all-zero matrix, where the proportions are defined as 0.
 """
 
 from __future__ import annotations
@@ -28,6 +49,8 @@ import jax.numpy as jnp
 
 from repro.core import centering
 from repro.core.distance_matrix import DistanceMatrix
+from repro.core.operators import (CenteredGramOperator,
+                                  centered_gram_matvec_distributed)
 
 
 @dataclasses.dataclass
@@ -39,33 +62,47 @@ class PCoAResults:
 
 
 # --------------------------------------------------------------------------
-# Randomized eigensolver (Halko et al. 2011) — pjit-shardable matmuls
+# Randomized eigensolver (Halko et al. 2011) — matvec-driven
 # --------------------------------------------------------------------------
+def _subspace_iteration(matvec, n: int, dtype, key, k: int, oversample: int,
+                        power_iters: int):
+    """Top-k eigenpairs of a symmetric operator given only ``matvec``.
+
+    Range finder: Y = A Ω, orthonormalize, power-iterate (A symmetric ⇒
+    AᵀA = A²); project T = QᵀAQ (small, (k+p)²); exact eigh of T lifts
+    back. Every O(n²k)-flop step is a single fused matvec — the operator
+    decides whether that is a sharded matmul, a row-blocked XLA sweep or
+    the Pallas kernel.
+    """
+    p = min(k + oversample, n)
+    omega = jax.random.normal(key, (n, p), dtype=dtype)
+    q, _ = jnp.linalg.qr(matvec(omega))
+    for _ in range(power_iters):
+        q, _ = jnp.linalg.qr(matvec(q))
+    t = q.T @ matvec(q)                    # (p, p) — tiny, host-side cost
+    t = 0.5 * (t + t.T)
+    evals, evecs = jnp.linalg.eigh(t)
+    # eigh returns ascending; take top-k by value (descending)
+    order = jnp.argsort(-evals)[:k]
+    return evals[order], (q @ evecs)[:, order]
+
+
+@partial(jax.jit, static_argnames=("k", "oversample", "power_iters"))
+def _randomized_eigh_matfree(op: CenteredGramOperator, key, k: int,
+                             oversample: int = 10, power_iters: int = 2):
+    """Matrix-free fsvd: the operator pytree crosses the jit boundary with
+    its tiling metadata static, so repeated solves of one shape reuse the
+    executable."""
+    return _subspace_iteration(op.matvec, op.n, op.dtype, key, k,
+                               oversample, power_iters)
+
+
 @partial(jax.jit, static_argnames=("k", "oversample", "power_iters"))
 def _randomized_eigh(a: jax.Array, key, k: int, oversample: int = 10,
                      power_iters: int = 2):
-    """Top-k eigenpairs of symmetric ``a`` via randomized subspace iteration.
-
-    Range finder: Y = A Ω, orthonormalize, power-iterate (A is symmetric so
-    AᵀA = A²); project T = QᵀAQ (small, (k+p)²); exact eigh of T lifts back.
-    Every O(n²k) op is a dense matmul ⇒ shards over a device mesh with the
-    matrix in P('data','model') and XLA-inserted collectives.
-    """
-    n = a.shape[0]
-    p = k + oversample
-    omega = jax.random.normal(key, (n, p), dtype=a.dtype)
-    y = a @ omega
-    q, _ = jnp.linalg.qr(y)
-    for _ in range(power_iters):
-        q, _ = jnp.linalg.qr(a @ q)
-    t = q.T @ (a @ q)                      # (p, p) — tiny, host-side cost
-    t = 0.5 * (t + t.T)
-    evals, evecs = jnp.linalg.eigh(t)
-    # eigh returns ascending; take top-k by magnitude of value (descending)
-    order = jnp.argsort(-evals)[:k]
-    evals = evals[order]
-    evecs = q @ evecs[:, order]
-    return evals, evecs
+    """Materialized fsvd — the baseline the benchmarks race against."""
+    return _subspace_iteration(lambda x: a @ x, a.shape[0], a.dtype, key, k,
+                               oversample, power_iters)
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -78,13 +115,33 @@ def _exact_eigh(a: jax.Array, k: int):
 # --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
+def _materialized_gram(dm_data: jax.Array, centering_impl: str, mesh):
+    if centering_impl == "ref":
+        return centering.center_distance_matrix_ref(dm_data)
+    if centering_impl == "fused":
+        return centering.center_distance_matrix(dm_data)
+    if centering_impl == "distributed":
+        if mesh is None:
+            raise ValueError("distributed centering requires a mesh")
+        return centering.center_distance_matrix_distributed(dm_data, mesh)
+    raise ValueError(f"unknown centering_impl {centering_impl!r}")
+
+
 def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
          key: Optional[jax.Array] = None, mesh=None,
-         centering_impl: str = "fused") -> PCoAResults:
+         centering_impl: str = "fused", materialize: bool = False,
+         matvec_impl: str = "xla", block: int = 256) -> PCoAResults:
     """Principal Coordinates Analysis of a distance matrix.
 
-    ``centering_impl``: "ref" (Algorithm 1), "fused" (Algorithm 2),
-    "distributed" (shard_map over ``mesh``). ``method``: "fsvd" | "eigh".
+    ``method="fsvd"`` (default) runs **matrix-free** against a
+    ``CenteredGramOperator`` — no n×n intermediate is ever written; pass
+    ``materialize=True`` for the legacy materialize-then-solve path (the
+    benchmark baseline). ``method="eigh"`` is the exact oracle and always
+    materializes. ``centering_impl`` ("ref" | "fused" | "distributed")
+    selects the centering for materialized paths; with
+    ``materialize=False`` only "distributed" changes behaviour, routing
+    each matvec through the shard_map mesh. ``matvec_impl``: "xla"
+    (row-blocked) | "pallas" (``kernels.center_matvec``).
     """
     if key is None:
         key = jax.random.PRNGKey(42)
@@ -94,31 +151,38 @@ def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
     n = len(dm)
     k = min(dimensions, n)
 
-    if centering_impl == "ref":
-        centered = centering.center_distance_matrix_ref(dm.data)
-    elif centering_impl == "fused":
-        centered = centering.center_distance_matrix(dm.data)
-    elif centering_impl == "distributed":
-        if mesh is None:
-            raise ValueError("distributed centering requires a mesh")
-        centered = centering.center_distance_matrix_distributed(dm.data, mesh)
-    else:
-        raise ValueError(f"unknown centering_impl {centering_impl!r}")
-
-    if method == "fsvd":
-        evals, evecs = _randomized_eigh(centered, key, k)
-    elif method == "eigh":
+    if method == "eigh":
+        centered = _materialized_gram(dm.data, centering_impl, mesh)
         evals, evecs = _exact_eigh(centered, k)
+        total = jnp.trace(centered)          # exact: the matrix exists
+    elif method == "fsvd":
+        if materialize:
+            centered = _materialized_gram(dm.data, centering_impl, mesh)
+            evals, evecs = _randomized_eigh(centered, key, k)
+            total = jnp.trace(centered)
+        elif centering_impl == "distributed":
+            if mesh is None:
+                raise ValueError("distributed matvec requires a mesh")
+            evals, evecs = _subspace_iteration(
+                lambda x: centered_gram_matvec_distributed(dm.data, x, mesh),
+                n, dm.data.dtype, key, k, oversample=10, power_iters=2)
+            total = CenteredGramOperator.from_distance(dm.data).trace()
+        else:
+            op = CenteredGramOperator.from_distance(dm.data, block=block,
+                                                    impl=matvec_impl)
+            evals, evecs = _randomized_eigh_matfree(op, key, k)
+            total = op.trace()
     else:
         raise ValueError(f"unknown method {method!r}")
 
     pos = jnp.maximum(evals, 0.0)
     coordinates = evecs * jnp.sqrt(pos)[None, :]
-    # proportion explained relative to the total positive inertia. With
-    # fsvd only k eigenvalues are known; scikit-bio uses the trace of the
-    # centered matrix (== Σλ) as the denominator, which we can get exactly.
-    total = jnp.trace(centered)
-    total = jnp.where(total <= 0, jnp.sum(pos), total)
-    proportion = pos / total
+    # proportion explained: clamped eigenvalues over the EXACT total
+    # inertia Σλ = tr(F) — from the operator's hoisted sums on matrix-free
+    # paths, jnp.trace of the already-materialized matrix otherwise. With
+    # fsvd only k eigenvalues are known, so a top-k denominator would
+    # silently overstate every proportion. tr(F) = 0 only for the all-zero
+    # matrix.
+    proportion = jnp.where(total > 0, pos / total, jnp.zeros_like(pos))
     return PCoAResults(coordinates=coordinates, eigenvalues=evals,
                        proportion_explained=proportion, method=method)

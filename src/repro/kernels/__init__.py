@@ -12,6 +12,9 @@ Each kernel family has three files (harness convention):
 Kernels (paper hot spots only — DESIGN §3):
 
 * ``center``       — two-pass fused PCoA centering (paper Algorithm 2).
+* ``center_matvec``— fused center-matvec for matrix-free PCoA: E-formation
+                     and the rank-1 centering corrections applied
+                     in-register against a skinny (n, k) block.
 * ``symhollow``    — fused symmetric+hollow validation (paper Algorithm 7).
 * ``mantel_corr``  — batched permuted-Pearson reduction with Y-tile reuse
                      (paper Algorithm 5, TPU-native formulation).
@@ -20,12 +23,14 @@ Kernels (paper hot spots only — DESIGN §3):
 """
 
 from repro.kernels.center_ops import center_distance_matrix_pallas
+from repro.kernels.center_matvec_ops import center_matvec_pallas
 from repro.kernels.symhollow_ops import is_symmetric_and_hollow_pallas
 from repro.kernels.mantel_corr_ops import mantel_corr_pallas
 from repro.kernels.rmsnorm_ops import rmsnorm_pallas
 
 __all__ = [
     "center_distance_matrix_pallas",
+    "center_matvec_pallas",
     "is_symmetric_and_hollow_pallas",
     "mantel_corr_pallas",
     "rmsnorm_pallas",

@@ -1,0 +1,80 @@
+"""jit'd public wrapper for the fused center-matvec kernel.
+
+Hoists the O(k) correction vectors, handles block-size selection and
+padding (zero rows/cols of D contribute 0 to E, zero rows of X contribute
+0 to the products, so the interior of the result is exact), and resolves
+the backend dispatch: ``interpret=None`` runs TPU-native on a TPU backend
+and falls back to the Pallas interpreter elsewhere (this container's CPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.center_matvec import center_matvec
+
+_DEFAULT_BLOCK = 512
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None = auto: native on TPU, interpreter everywhere else."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def pick_block(n: int, requested: int, lane: int = 8, floor: int = 1) -> int:
+    """Largest multiple-of-``lane`` block <= requested (tiny n falls back to
+    ``floor``; native TPU callers pass floor=lane to keep tiles lane-legal).
+    The single home of the lane-snapping rule — mantel_corr and the partial
+    Mantel statistic reuse it, so a lane-width change lands everywhere."""
+    b = min(requested, n)
+    if b >= lane:
+        b -= b % lane
+    return max(b, floor)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def center_matvec_pallas(d: jax.Array, x: jax.Array, row_means: jax.Array,
+                         global_mean: jax.Array, *,
+                         block_m: int = _DEFAULT_BLOCK,
+                         block_n: int = _DEFAULT_BLOCK,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """``F @ x`` via the fused Pallas kernel, F never materialized.
+
+    d: (n, n) distance matrix; x: (n, k); row_means/global_mean: the
+    operator's hoisted statistics of E = −½D∘D.
+    """
+    interpret = resolve_interpret(interpret)
+    n, k = d.shape[0], x.shape[1]
+    # TPU-native tiles need lane-aligned columns; the interpreter is free
+    lane_n = 8 if interpret else 128
+    floor_n = 1 if interpret else lane_n
+    bm = pick_block(n, block_m)
+    bn = pick_block(n, block_n, lane_n, floor=floor_n)
+    pad = max((-n) % bm, (-n) % bn)      # keep D square
+    np_ = n + pad
+    bm = pick_block(np_, bm)
+    bn = pick_block(np_, bn, lane_n, floor=floor_n)
+    pad_k = (-k) % (8 if interpret else 128)
+
+    # hoisted O(k) corrections — computed on the TRUE operands, pre-padding
+    colsum = jnp.sum(x, axis=0)
+    corr = global_mean * colsum - row_means @ x
+
+    if pad:
+        d = jnp.pad(d, ((0, pad), (0, pad)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        row_means = jnp.pad(row_means, (0, pad))
+    if pad_k:
+        x = jnp.pad(x, ((0, 0), (0, pad_k)))
+        colsum = jnp.pad(colsum, (0, pad_k))
+        corr = jnp.pad(corr, (0, pad_k))
+
+    out = center_matvec(d, x, row_means, colsum, corr,
+                        block_m=bm, block_n=bn, interpret=interpret)
+    return out[:n, :k]

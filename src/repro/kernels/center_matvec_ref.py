@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused center-matvec kernel: materialize the
+Gower-centered matrix the eager way, then multiply — exactly the traffic
+pattern the kernel exists to eliminate."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.center_ref import center_distance_matrix_ref
+
+
+def center_matvec_ref(d: jax.Array, x: jax.Array) -> jax.Array:
+    """``center(D) @ x`` with the full n² matrix materialized."""
+    return center_distance_matrix_ref(d) @ x

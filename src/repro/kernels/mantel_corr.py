@@ -22,9 +22,13 @@ fused multiply-accumulate — ideal VPU work.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.center_matvec_ops import resolve_interpret
 
 
 def _mantel_kernel(xp_ref, y_ref, out_ref):
@@ -41,12 +45,15 @@ def _mantel_kernel(xp_ref, y_ref, out_ref):
 
 
 def mantel_corr(xp: jax.Array, yhat: jax.Array, *, block_m: int,
-                block_n: int, interpret: bool = True) -> jax.Array:
+                block_n: int, interpret: Optional[bool] = None) -> jax.Array:
     """stats[b] = Σ_ij xp[b,i,j]·yhat[i,j]; caller divides by 2‖x−x̄‖.
 
     xp: (B, n, n) batch of row+col permuted X. yhat: (n, n) symmetric
-    centered-normalized Y with zero diagonal.
+    centered-normalized Y with zero diagonal. ``interpret=None`` resolves
+    by backend: native Mosaic lowering on a TPU, the Pallas interpreter
+    everywhere else (this container's CPU).
     """
+    interpret = resolve_interpret(interpret)
     b_perms, n, _ = xp.shape
     grid = (n // block_m, n // block_n, b_perms)   # b innermost → Y-tile reuse
     return pl.pallas_call(

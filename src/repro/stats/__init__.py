@@ -15,6 +15,9 @@ devices"):
                        (``SS_total = tr(G)`` hoisted; per-permutation
                        gather-matmul).
 * ``anosim``         — Clarke's R with the rank transform hoisted.
+* ``permdisp``       — Anderson's dispersion-homogeneity F with the whole
+                       ordination hoisted (matrix-free PCoA coordinates;
+                       per-permutation only centroids + distances move).
 * ``partial_mantel`` — three-matrix partial correlation with ŷ
                        residualized once and both inner products fused
                        (optionally via the ``kernels.mantel_corr`` Pallas
@@ -44,6 +47,7 @@ from repro.stats.permanova import (
     permanova,
     permanova_ref,
 )
+from repro.stats.permdisp import PermdispStatistic, permdisp, permdisp_ref
 
 __all__ = [
     "PermutationTestResult", "Statistic", "permutation_orders",
@@ -52,4 +56,5 @@ __all__ = [
     "PartialMantelPallasStatistic", "PartialMantelStatistic",
     "partial_mantel", "partial_mantel_ref",
     "PermanovaStatistic", "permanova", "permanova_ref",
+    "PermdispStatistic", "permdisp", "permdisp_ref",
 ]

@@ -84,17 +84,24 @@ class PartialMantelStatistic:
          meta_fields=["n", "block", "interpret"])
 @dataclasses.dataclass
 class PartialMantelPallasStatistic(PartialMantelStatistic):
-    """Same statistic; per-batch path through ``kernels.mantel_corr``."""
+    """Same statistic; per-batch path through ``kernels.mantel_corr``.
+
+    ``interpret=None`` dispatches by backend (TPU-native on a TPU, the
+    interpreter on CPU) — lane width follows the resolved mode."""
 
     block: int = 256
-    interpret: bool = True
+    interpret: Optional[bool] = None
 
     def _tile(self):
-        # pad n to the next multiple of 8 *before* choosing the tile, so a
+        # pad n to the next lane multiple *before* choosing the tile, so a
         # small n never ends up with pad ≈ b−1 (e.g. n=100 now tiles as one
-        # 104-block with pad 4, not 96-blocks with pad 92 → ~4x the work)
-        padded = ((self.n + 7) // 8) * 8
-        b = max(min(self.block, padded) // 8 * 8, 8)
+        # 104-block with pad 4, not 96-blocks with pad 92 → ~4x the work).
+        # Native TPU lowering needs 128-wide lanes; the interpreter is free.
+        from repro.kernels.center_matvec_ops import (pick_block,
+                                                     resolve_interpret)
+        lane = 8 if resolve_interpret(self.interpret) else 128
+        padded = -(-self.n // lane) * lane
+        b = pick_block(padded, self.block, lane, floor=lane)
         padded = -(-padded // b) * b
         return b, padded - self.n
 

@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.centering import (center_distance_matrix,
                                   center_distance_matrix_ref)
 from repro.core.distance_matrix import random_distance_matrix
+from repro.core.operators import CenteredGramOperator
 from repro.core.validation import is_symmetric_and_hollow
 from repro.kernels import center_distance_matrix_pallas, rmsnorm_pallas
 from repro.kernels.rmsnorm_ref import rmsnorm_ref
@@ -55,6 +56,27 @@ def test_centering_scales_quadratically(n, seed, scale):
     f1 = np.asarray(center_distance_matrix(dm))
     f2 = np.asarray(center_distance_matrix(dm * scale))
     np.testing.assert_allclose(f2, f1 * scale**2, rtol=2e-3, atol=2e-3)
+
+
+@given(n=st.integers(4, 97), seed=st.integers(0, 2**30),
+       k=st.integers(1, 12), block=st.sampled_from([8, 16, 32]),
+       impl=st.sampled_from(["xla", "pallas"]))
+@settings(**_settings)
+def test_operator_matvec_equals_materialized_any_shape(n, seed, k, block,
+                                                       impl):
+    """CenteredGramOperator.matvec == center_distance_matrix(D) @ X to
+    ≤1e-5 relative, across odd n (non-multiples of the block) and both
+    matvec backends."""
+    dm = random_distance_matrix(jax.random.PRNGKey(seed), n).data
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, k))
+    op = CenteredGramOperator.from_distance(dm, block=block, impl=impl)
+    want = np.asarray(center_distance_matrix(dm) @ x)
+    got = np.asarray(op.matvec(x))
+    scale = max(np.abs(want).max(), 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale)
+    # and the hoisted trace is the materialized trace
+    tr = float(jnp.trace(center_distance_matrix(dm)))
+    assert abs(float(op.trace()) - tr) <= 1e-5 * max(abs(tr), 1.0)
 
 
 @given(n=st.integers(4, 48), seed=st.integers(0, 2**30))

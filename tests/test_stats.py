@@ -14,7 +14,8 @@ from repro.core import mantel, mantel_ref, random_distance_matrix
 from repro.core.mantel import MantelStatistic
 from repro.stats import (anosim, anosim_ref, partial_mantel,
                          partial_mantel_ref, permanova, permanova_ref,
-                         permutation_test, permutation_test_distributed)
+                         permdisp, permdisp_ref, permutation_test,
+                         permutation_test_distributed)
 from repro.stats.engine import encode_grouping, permutation_orders
 from repro.stats.permanova import PermanovaStatistic
 
@@ -155,6 +156,60 @@ def test_anosim_r_range_and_structure():
     assert r.p_value == pytest.approx(1 / 100)
     r0 = anosim(_dm(9, n), g, permutations=99, key=KEY)
     assert -1.0 <= r0.statistic <= 1.0
+
+
+# --------------------------------------------------------------------------
+# permdisp
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,k,perms", [(32, 3, 99), (27, 3, 49)])
+def test_permdisp_fused_matches_ref(n, k, perms):
+    """Acceptance: identical keys ⇒ identical permutation orders ⇒
+    identical p-values, fused (matrix-free PCoA coords) vs eager oracle."""
+    dm, g = _dm(23, n), _grouping(n, k)
+    got = permdisp(dm, g, permutations=perms, key=KEY)
+    want = permdisp_ref(dm, g, permutations=perms, key=KEY)
+    assert abs(got.statistic - want.statistic) < 1e-4 * max(
+        abs(want.statistic), 1.0)
+    assert abs(got.p_value - want.p_value) < 1e-9
+
+
+def test_permdisp_detects_dispersion_difference():
+    """Two groups around one centroid, radically different spreads ⇒ huge
+    F and the minimal p; equal spreads ⇒ F near 1, p not extreme."""
+    key = jax.random.PRNGKey(30)
+    n = 40
+    g = _grouping(n, 2)
+    scales = jnp.where(jnp.asarray(g) == 0, 0.05, 5.0)[:, None]
+    pts = scales * jax.random.normal(key, (n, 3))
+    d = jnp.sqrt(jnp.maximum(
+        jnp.sum((pts[:, None] - pts[None, :]) ** 2, -1), 0))
+    d = 0.5 * (d + d.T)
+    from repro.core import DistanceMatrix
+    dm = DistanceMatrix(d - jnp.diag(jnp.diag(d)), _skip_validation=True)
+    r = permdisp(dm, g, permutations=99, key=KEY)
+    assert r.statistic > 10.0
+    assert r.p_value == pytest.approx(1 / 100)
+    r0 = permdisp(_dm(34, n), g, permutations=99, key=KEY)
+    assert r0.p_value > 0.05
+
+
+def test_permdisp_low_dimensional_and_eigh():
+    """dimensions=k truncation and the eigh coordinate path both run and
+    stay consistent with each other on low-rank (dim=8 < k) input."""
+    dm, g = _dm(32), _grouping()
+    a = permdisp(dm, g, permutations=49, key=KEY, dimensions=12)
+    b = permdisp(dm, g, permutations=49, key=KEY, dimensions=12,
+                 method="eigh")
+    assert abs(a.statistic - b.statistic) < 1e-3 * max(abs(b.statistic), 1.0)
+    assert abs(a.p_value - b.p_value) < 1e-9
+
+
+def test_permdisp_validation():
+    dm = _dm(33)
+    with pytest.raises(ValueError):
+        permdisp(dm, _grouping(12), permutations=9)    # length mismatch
+    with pytest.raises(ValueError):
+        permdisp(dm, ["a"] * 36, permutations=9)       # one group
 
 
 # --------------------------------------------------------------------------
