@@ -1,0 +1,134 @@
+"""--suite api: analytic O(n²) traffic of a 4-analysis session,
+Workspace vs standalone.
+
+``PYTHONPATH=src python -m benchmarks.run --suite api``
+
+The measured quantity is **analytic matrix traffic**, not wall-clock:
+container timing is ±40% noisy, while the number of O(n²) hoist passes is
+exact — each `HoistCache` build maps to a documented number of n²-sized
+passes over D (or a derived n² matrix), so bytes = passes · n² · 4 (fp32).
+The canonical session is the Sfiligoi-et-al. study battery — PCoA,
+PERMANOVA, PERMDISP, ANOSIM on one matrix. "standalone" runs each
+analysis on its own one-shot Workspace (exactly what the legacy free
+functions do); "workspace" shares one session. Emits ``BENCH_api.json``
+so the traffic ratio is the tracked artifact (wall time is recorded but
+informational only).
+"""
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.api.config import ExecConfig
+from repro.api.workspace import Workspace
+from repro.core.distance_matrix import random_distance_matrix
+
+_NUM_GROUPS = 8
+_DIMS = 10
+
+# Analytic n²-pass cost of building each HoistCache artifact (reads +
+# writes of n²-sized buffers, fp32). These mirror the implementations:
+#   operator — row/global means of E in ONE read of D (the paper's hoist)
+#   gram     — fused centering: 2 reads + 2 writes (paper Algorithm 2)
+#   ranks    — condensed read + O(m log m) sort traffic + square rank
+#              matrix write ≈ 2 full passes
+#   moments  — condensed read + centered-norm reduce ≈ ½ pass (O(m))
+#   hat_full — square symmetric hat-matrix gather + write ≈ 1 pass
+#   coords   — the fsvd solve: 4 operator matvecs (range find + 2 power
+#              iterations + projection), each one read of D
+_PASSES = {"operator": 1.0, "gram": 4.0, "ranks": 2.0, "moments": 0.5,
+           "hat_full": 1.0, "coords": 4.0}
+
+
+def _artifact(key):
+    return key if isinstance(key, str) else key[0]
+
+
+def _session(ws, grouping, permutations, key):
+    ws.pcoa(dimensions=_DIMS)
+    ws.permanova(grouping, permutations=permutations, key=key)
+    ws.permdisp(grouping, permutations=permutations, key=key,
+                dimensions=_DIMS)
+    ws.anosim(grouping, permutations=permutations, key=key)
+
+
+def _accounting(caches, n):
+    builds = {}
+    for cache in caches:
+        for k, c in cache.misses.items():
+            a = _artifact(k)
+            builds[a] = builds.get(a, 0) + c
+    passes = sum(_PASSES[a] * c for a, c in builds.items())
+    return {"builds": builds, "d_passes": passes,
+            "analytic_bytes": passes * n * n * 4}
+
+
+def run(sizes=(512, 2048), permutations=999, out_json="BENCH_api.json"):
+    print(f"\n# --suite api — 4-analysis session "
+          f"(pcoa k={_DIMS} / permanova / permdisp / anosim), "
+          f"K={permutations}: one Workspace vs per-call hoists")
+    key = jax.random.PRNGKey(7)
+    results = {}
+    for n in sizes:
+        dm = random_distance_matrix(jax.random.PRNGKey(n), n)
+        grouping = np.arange(n) % _NUM_GROUPS
+
+        # -- workspace mode: one session, shared HoistCache ---------------
+        ws = Workspace(dm, config=ExecConfig())
+        t0 = time.perf_counter()
+        _session(ws, grouping, permutations, key)
+        t_ws = time.perf_counter() - t0
+        shared = _accounting([ws.cache], n)
+
+        # -- standalone mode: a fresh one-shot Workspace per analysis -----
+        # (exactly the legacy free-function behaviour, instrumented)
+        t0 = time.perf_counter()
+        solos = []
+        for analysis in ("pcoa", "permanova", "permdisp", "anosim"):
+            solo = Workspace(dm, config=ExecConfig())
+            if analysis == "pcoa":
+                solo.pcoa(dimensions=_DIMS)
+            elif analysis == "permanova":
+                solo.permanova(grouping, permutations=permutations, key=key)
+            elif analysis == "permdisp":
+                solo.permdisp(grouping, permutations=permutations, key=key,
+                              dimensions=_DIMS)
+            else:
+                solo.anosim(grouping, permutations=permutations, key=key)
+            solos.append(solo.cache)
+        t_solo = time.perf_counter() - t0
+        standalone = _accounting(solos, n)
+
+        ratio = standalone["d_passes"] / shared["d_passes"]
+        shared["seconds"] = t_ws
+        standalone["seconds"] = t_solo
+        results[n] = {"workspace": shared, "standalone": standalone,
+                      "traffic_ratio": ratio}
+        print(f"api  n={n:<6d} workspace {shared['d_passes']:5.1f} n²-passes"
+              f" ({shared['analytic_bytes'] / 1e6:8.1f} MB)  standalone "
+              f"{standalone['d_passes']:5.1f} ({standalone['analytic_bytes'] / 1e6:8.1f} MB)"
+              f"  -> {ratio:.2f}x less traffic; wall {t_ws:.2f}s vs "
+              f"{t_solo:.2f}s (informational)")
+
+    if out_json:
+        artifact = {
+            "suite": "api",
+            "analyses": ["pcoa", "permanova", "permdisp", "anosim"],
+            "dimensions": _DIMS,
+            "permutations": permutations,
+            "num_groups": _NUM_GROUPS,
+            "pass_table": _PASSES,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "results": {str(n): r for n, r in results.items()},
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

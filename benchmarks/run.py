@@ -14,6 +14,10 @@ Suites:
   pcoa — ordination: ref/fused materialize-then-solve vs the matrix-free
     operator path at n ∈ {2048, 4096}; writes BENCH_pcoa.json with wall
     time and peak matrix bytes.
+  api — hoist-once sessions: analytic O(n²)-pass counts (bytes of D read)
+    for the 4-analysis study battery, one shared Workspace vs standalone
+    per-call hoists; writes BENCH_api.json. The gate is the analytic
+    traffic ratio, not wall-clock (container timing is ±40% noisy).
 """
 
 import argparse
@@ -21,7 +25,7 @@ import platform
 
 import jax
 
-from benchmarks import bench_center, bench_mantel, bench_pcoa, \
+from benchmarks import bench_api, bench_center, bench_mantel, bench_pcoa, \
     bench_stats, bench_validation
 
 
@@ -30,9 +34,10 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes / fewer repeats")
     ap.add_argument("--suite", default="paper",
-                    choices=("paper", "stats", "pcoa"),
+                    choices=("paper", "stats", "pcoa", "api"),
                     help="paper tables (default), the repro.stats sweep, "
-                         "or the matrix-free ordination sweep")
+                         "the matrix-free ordination sweep, or the "
+                         "hoist-once Workspace session accounting")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -40,6 +45,20 @@ def main() -> None:
     print("# paper: Sfiligoi/McDonald/Knight PEARC'21 — sizes scaled to "
           "one CPU core; the measured quantity is the fused-vs-multipass "
           "RATIO (see EXPERIMENTS.md §Benchmarks)")
+
+    if args.suite == "api":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size trajectory file
+            s = bench_api.run(sizes=(256, 512), permutations=199,
+                              out_json="BENCH_api_fast.json")
+        else:
+            s = bench_api.run()
+        print("\n# summary — O(n²) traffic, standalone / one Workspace")
+        for n, r in s.items():
+            print(f"api-session     n={n:<6d} {r['traffic_ratio']:6.2f}x "
+                  f"less matrix traffic (analytic)")
+        return
 
     if args.suite == "pcoa":
         if args.fast:

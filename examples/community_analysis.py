@@ -1,4 +1,4 @@
-"""Community ecology walkthrough on the repro.stats engine.
+"""Community ecology walkthrough — one hoist-once Workspace session.
 
 The paper's motivating workload (§1) is microbiome beta-diversity: compute
 distance matrices, then ask statistical questions of them. This example
@@ -13,19 +13,28 @@ analysis of Sfiligoi et al. 2021:
       → Mantel      do the two metrics agree?         (Pearson r)
       → partial Mantel   ...controlling for the confounding gradient?
 
-PCoA runs matrix-free through ``core.operators.CenteredGramOperator`` —
-the n×n Gower matrix is never materialized, which is what lets the
-large-cohort sizes fit on a personal device — and PERMDISP reuses those
-same coordinates as its hoisted invariant (a significant PERMANOVA with a
-significant PERMDISP warns that location and dispersion are confounded).
+Everything runs through ``repro.api.Workspace`` — the session object that
+finishes the paper's "read the big matrix once" argument *across*
+analyses: the matrix is validated and canonicalized once, and the shared
+O(n²) hoists (operator means, Gower centering, ranks, ordination
+coordinates, normalization moments) are computed on first use and reused
+by every later test in the session (watch the HoistCache summary at the
+end: the second wave of analyses builds nothing). One ``ExecConfig``
+carries every execution knob; every result records its RNG key.
 
     PYTHONPATH=src python examples/community_analysis.py [--n 2048]
 
-Every test shares one hoisted+fused Monte-Carlo engine
-(repro.stats.engine): permutation-invariant work — Gower centering,
-ranks, ŷ/ẑ normalization + residualization — happens once; each of the
-K permutations is a single fused pass. Compare any test against its
-eager ``*_ref`` oracle via ``benchmarks/run.py --suite stats``.
+Legacy style (still supported — each call is a thin wrapper over a
+one-shot Workspace, identical p-values per key, but the hoists are NOT
+shared across calls):
+
+    from repro.core import mantel, pcoa
+    from repro.stats import anosim, partial_mantel, permanova, permdisp
+    ord_ = pcoa(metric_a, dimensions=3)
+    r = permanova(metric_a, grouping, 999, key)      # re-centers
+    r = permdisp(metric_a, grouping, 999, key)       # re-ordinates
+    r = anosim(metric_a, grouping, 999, key)         # re-ranks
+    s, p, _ = mantel(metric_a, metric_b, 999, key)   # re-normalizes
 """
 
 import argparse
@@ -35,8 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DistanceMatrix, mantel, pcoa
-from repro.stats import anosim, partial_mantel, permanova, permdisp
+from repro.api import ExecConfig, Workspace
+from repro.core import DistanceMatrix
 
 
 def _euclidean_dm(pts):
@@ -70,11 +79,18 @@ def simulate_study(key, n, num_groups=4, dim=8):
 def main(n: int = 2048, permutations: int = 999):
     key = jax.random.PRNGKey(0)
     grouping, metric_a, metric_b, confounder = simulate_study(key, n)
-    test_key = jax.random.PRNGKey(1)
+    test_key = 1                     # int seeds and PRNG keys both accepted
     print(f"== community analysis: {n} samples, 4 groups, K={permutations} ==")
 
+    # one session per matrix: validate + canonicalize once, hoist once.
+    # ExecConfig is where execution knobs would go (matvec_impl="pallas",
+    # a mesh for the distributed paths, ...) — defaults suit one CPU/TPU.
+    ws = Workspace(metric_a, config=ExecConfig())
+    ws_b = Workspace(metric_b)
+    ws_env = Workspace(confounder)
+
     t0 = time.perf_counter()
-    ord_ = pcoa(metric_a, dimensions=3)          # matrix-free by default
+    ord_ = ws.pcoa(dimensions=3)                 # matrix-free by default
     jax.block_until_ready(ord_.coordinates)
     pe = np.asarray(ord_.proportion_explained)
     print(f"[0] PCoA (matrix-free)  top-3 axes explain "
@@ -82,36 +98,40 @@ def main(n: int = 2048, permutations: int = 999):
           f"({time.perf_counter() - t0:.2f}s, no n² intermediate)")
 
     t0 = time.perf_counter()
-    r = permanova(metric_a, grouping, permutations, test_key)
+    r = ws.permanova(grouping, permutations, test_key)
     print(f"[1] PERMANOVA      F={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
     t0 = time.perf_counter()
-    r = permdisp(metric_a, grouping, permutations, test_key, dimensions=10)
+    r = ws.permdisp(grouping, permutations, test_key, dimensions=3)
     print(f"[2] PERMDISP       F={r.statistic:8.3f}  p={r.p_value:.4f}  "
-          f"({time.perf_counter() - t0:.2f}s) — location vs spread check")
+          f"({time.perf_counter() - t0:.2f}s) — reused [0]'s ordination")
 
     t0 = time.perf_counter()
-    r = anosim(metric_a, grouping, permutations, test_key)
+    r = ws.anosim(grouping, permutations, test_key)
     print(f"[3] ANOSIM         R={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
     t0 = time.perf_counter()
-    s, p, _ = mantel(metric_a, metric_b, permutations, test_key)
-    print(f"[4] Mantel A~B     r={s:8.3f}  p={p:.4f}  "
+    r = ws.mantel(ws_b, permutations, test_key)
+    print(f"[4] Mantel A~B     r={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
     t0 = time.perf_counter()
-    s, p, _ = mantel(metric_a, confounder, permutations, test_key)
-    print(f"[5] Mantel A~env   r={s:8.3f}  p={p:.4f}  "
+    r = ws.mantel(ws_env, permutations, test_key)
+    print(f"[5] Mantel A~env   r={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s) — the confounded read")
 
     t0 = time.perf_counter()
-    r = partial_mantel(metric_a, metric_b, confounder, permutations, test_key)
+    r = ws.partial_mantel(ws_b, ws_env, permutations, test_key)
     print(f"[6] partial A~B|env r={r.statistic:7.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s) — agreement survives the "
           f"control")
-    print("== analysis complete ==")
+
+    families = {k if isinstance(k, str) else k[0] for k in ws.cache.misses}
+    builds = {a: ws.cache.build_count(a) for a in sorted(families)}
+    print(f"== analysis complete — hoists built once each: {builds}, "
+          f"cache hits: {sum(ws.cache.hits.values())} ==")
     return r
 
 

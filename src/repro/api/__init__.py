@@ -1,0 +1,46 @@
+"""repro.api — hoist-once analysis sessions.
+
+The paper's core lesson is "read the big matrix once, fuse everything
+else". The subsystems below it (``core.operators``, ``stats.engine``)
+apply that *within* one analysis; this package applies it *across* a whole
+session: a microbiome study runs PCoA, PERMANOVA, PERMDISP, ANOSIM and
+Mantel back-to-back on the **same** distance matrix (Sfiligoi et al. 2021),
+and every shared O(n²) hoist — Gower centering, the operator's row/global
+means, the rank transform, the ordination coordinates — should be computed
+once and reused, not re-derived per entry point.
+
+* ``Workspace(dm, config=ExecConfig(...))`` — validates and canonicalizes
+  the matrix once, then serves every analysis off a lazy ``HoistCache``.
+* ``ExecConfig``   — the single home for execution knobs that used to be
+  scattered per-function kwargs.
+* ``OrdinationResult`` / ``PermutationTestResult`` — the two unified
+  result shapes, with the RNG key recorded.
+
+Legacy free functions (``core.pcoa.pcoa``, ``stats.permanova``, ...) keep
+their signatures and are thin wrappers over a one-shot Workspace — same
+p-values per key, none of the cross-analysis reuse.
+
+``config``/``results`` import nothing from ``repro`` (so core/stats can
+import them cycle-free); ``Workspace`` loads lazily for the same reason.
+"""
+
+from repro.api.config import ExecConfig
+from repro.api.results import OrdinationResult
+
+__all__ = ["ExecConfig", "OrdinationResult", "PermutationTestResult",
+           "HoistCache", "Workspace"]
+
+_LAZY = ("Workspace", "HoistCache", "PermutationTestResult")
+
+
+def __getattr__(name):
+    # PEP 562 lazy loading: workspace pulls in core+stats, which themselves
+    # import api.config/api.results during *their* init — resolving these
+    # names on first use (instead of at package import) breaks the cycle.
+    if name in ("Workspace", "HoistCache"):
+        from repro.api import workspace
+        return getattr(workspace, name)
+    if name == "PermutationTestResult":
+        from repro.stats.engine import PermutationTestResult
+        return PermutationTestResult
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

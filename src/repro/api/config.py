@@ -1,0 +1,117 @@
+"""ExecConfig: one home for every execution knob in the analysis stack.
+
+Before the `repro.api` redesign the knobs that decide *how* an analysis
+executes — which matvec kernel, which centering implementation, whether to
+materialize the Gower matrix, Pallas tile sizes, the permutation batch,
+the device mesh — were scattered as inconsistent per-function kwargs
+(`pcoa(matvec_impl=..., block=...)`, `partial_mantel(kernel=...)`,
+`permutation_test(batch_size=...)`, ...). ``ExecConfig`` collects them in
+a single frozen pytree dataclass that threads uniformly through
+``api.Workspace``, ``core.pcoa``, ``core.mantel``, ``stats.engine`` and
+the kernel dispatchers.
+
+It is registered as a *leaf-free* pytree (every field is static metadata),
+so it can sit inside jitted pytrees or static args: two configs compare
+equal iff every knob matches, and each distinct config keys its own jit
+cache entry.
+
+This module deliberately imports nothing from ``repro`` so any layer —
+core, stats, kernels — can import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=[],
+         meta_fields=["matvec_impl", "centering_impl", "materialize",
+                      "interpret", "block", "batch_size", "kernel", "mesh",
+                      "device"])
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Execution configuration shared by every analysis entry point.
+
+    Fields
+    ------
+    matvec_impl:
+        Backend for ``CenteredGramOperator.matvec`` — ``"xla"`` (row-blocked
+        jnp matmuls, the default) or ``"pallas"`` (the VMEM-tiled
+        ``kernels.center_matvec`` kernel).
+    centering_impl:
+        Implementation used whenever a *materialized* Gower-centered matrix
+        is required (PERMANOVA's hoist, ``pcoa(method="eigh")``, the
+        ``materialize=True`` fallback) — ``"ref"`` (eager multi-pass
+        oracle), ``"fused"`` (single-jit two-pass, the default) or
+        ``"distributed"`` (shard_map over ``mesh``).
+    materialize:
+        ``True`` restores the legacy materialize-then-solve ordination path
+        (the benchmark baseline); ``False`` (default) runs PCoA matrix-free
+        through the operator.
+    interpret:
+        Pallas dispatch mode — ``None`` (default) auto-resolves per backend
+        (native on TPU, interpreter elsewhere, e.g. this container's CPU);
+        ``True``/``False`` force it.
+    block:
+        Row/column tile size for the operator matvec and the Pallas kernels
+        (lane-snapped per backend by ``kernels.center_matvec_ops.pick_block``).
+    batch_size:
+        Permutations evaluated per ``lax.map`` step in the stats engine.
+        ``None`` (default) keeps each test's tuned default (8 for the
+        mantel family, whose per-perm operand is an n x n gather; 32 for the
+        grouping tests, whose operand is only the (n, k) design).
+    kernel:
+        Reduction backend for the (partial) Mantel inner products —
+        ``"xla"`` (default) or ``"pallas"`` (``kernels.mantel_corr`` with
+        Y-tile reuse across the permutation batch).
+    mesh:
+        Optional ``jax.sharding.Mesh`` for the distributed paths
+        (``centering_impl="distributed"``, distributed matvec/engine).
+    device:
+        Optional ``jax.Device`` the Workspace pins its canonical matrix to
+        (``None``: wherever jax placed it).
+    """
+
+    matvec_impl: str = "xla"
+    centering_impl: str = "fused"
+    materialize: bool = False
+    interpret: Optional[bool] = None
+    block: int = 256
+    batch_size: Optional[int] = None
+    kernel: str = "xla"
+    mesh: Optional[Any] = None
+    device: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.matvec_impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown matvec_impl {self.matvec_impl!r}")
+        if self.centering_impl not in ("ref", "fused", "distributed"):
+            raise ValueError(f"unknown centering_impl "
+                             f"{self.centering_impl!r}")
+        if self.kernel not in ("xla", "pallas"):
+            raise ValueError(f"unknown kernel {self.kernel!r}")
+        if self.centering_impl == "distributed" and self.mesh is None:
+            raise ValueError("centering_impl='distributed' requires a mesh")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+        if self.batch_size is not None and self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1 or None, "
+                             f"got {self.batch_size}")
+
+    def replace(self, **changes) -> "ExecConfig":
+        """A copy with ``changes`` applied (``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)
+
+    def resolve_batch_size(self, explicit: Optional[int],
+                           default: int) -> int:
+        """Precedence: explicit call-site arg > config > per-test default."""
+        if explicit is not None:
+            return explicit
+        if self.batch_size is not None:
+            return self.batch_size
+        return default

@@ -1,0 +1,45 @@
+"""Unified result dataclasses for the `repro.api` surface.
+
+Every analysis returns one of two shapes:
+
+* ``OrdinationResult``       — coordinates/eigenvalues/proportions of an
+                               ordination (PCoA), with the solver method
+                               and the RNG key that drove it recorded.
+* ``PermutationTestResult``  — statistic/p-value of a Monte-Carlo
+                               permutation test (defined in
+                               ``repro.stats.engine``, the module that
+                               owns the loop; re-exported by
+                               ``repro.api``), likewise carrying the test
+                               name and the resolved RNG key.
+
+Recording the key closes the reproducibility loop: a result object alone
+is enough to re-run the exact analysis (`key` + `permutations`/`method`
+fully determine the Monte-Carlo draw or the fsvd range-finder).
+
+This module deliberately imports nothing from ``repro`` so any layer can
+import it without cycles (``core.pcoa`` constructs ``OrdinationResult``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class OrdinationResult:
+    """What every ordination entry point returns.
+
+    ``coordinates`` are scaled by sqrt(lambda) (scikit-bio convention),
+    ``method`` names the solver ("fsvd" | "eigh"), and ``key`` records the
+    RNG key the randomized solver consumed (``None`` for the deterministic
+    eigh path) so the result is self-describing and replayable.
+    """
+
+    coordinates: jax.Array           # (n, k) — samples in ordination space
+    eigenvalues: jax.Array           # (k,)
+    proportion_explained: jax.Array  # (k,)
+    method: str = "fsvd"
+    key: Optional[jax.Array] = dataclasses.field(default=None, compare=False)

@@ -1,0 +1,341 @@
+"""Workspace: hoist-once analysis sessions over one distance matrix.
+
+The paper optimizes each analysis in isolation — validate in one pass,
+center in two, hoist the permutation-invariants out of the Monte-Carlo
+loop. But a real study (Sfiligoi et al. 2021, "Enabling microbiome
+research on personal devices") runs *several* analyses on the **same**
+matrix back-to-back, and the free-function API made each one re-pay the
+O(n²) reads: ``pcoa`` and ``permdisp`` each re-hoisted the operator means,
+``permanova`` re-centered, ``anosim`` re-ranked, every ``mantel`` call
+re-normalized both matrices.
+
+``Workspace`` is the session object that finishes the argument:
+
+* construction validates (fused single-pass) and canonicalizes the matrix
+  **once** — fp32 storage, optional device placement — exactly like the
+  paper's §4.3 validation caching, extended to every derived artifact;
+* the shared hoists live behind a lazy ``HoistCache`` keyed by artifact —
+  row/global means of E = −½D∘D (``operator``), the materialized Gower
+  matrix (``gram``), the rank transform (``ranks``), condensed
+  normalization moments (``moments``) and their square hat form
+  (``hat_full``), and full PCoA solutions (``coords``) — each computed on
+  first use and reused by every later analysis in the session;
+* every analysis method threads the session's single ``ExecConfig``
+  through ``core.pcoa``, ``stats.engine`` and the kernel dispatchers, and
+  returns the unified ``OrdinationResult`` / ``PermutationTestResult``
+  with the resolved RNG key recorded.
+
+The legacy free functions (``core.pcoa.pcoa``, ``core.mantel.mantel``,
+``stats.permanova`` …) are thin wrappers over a one-shot Workspace — same
+signatures, identical p-values per key — so the only thing a session
+changes is how often D is read.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import ExecConfig
+from repro.api.results import OrdinationResult
+from repro.core.distance_matrix import DistanceMatrix
+from repro.core.mantel import MantelStatistic, condensed_moments, hat_square
+from repro.core.operators import CenteredGramOperator
+from repro.core.pcoa import pcoa as _pcoa
+from repro.core.pcoa import resolve_dimensions
+from repro.stats import engine
+from repro.stats.anosim import AnosimStatistic, rank_transform
+from repro.stats.engine import PermutationTestResult, as_key
+from repro.stats.partial_mantel import (PartialMantelPallasStatistic,
+                                        PartialMantelStatistic)
+from repro.stats.permanova import PermanovaStatistic
+from repro.stats.permdisp import PermdispStatistic
+
+
+class HoistCache:
+    """Keyed store for a session's shared hoisted artifacts, instrumented
+    with per-key hit/miss counters so "the O(n²) hoist ran exactly once"
+    is a testable property, not a hope.
+
+    Keys are either artifact names ("operator", "gram", "ranks",
+    "moments", "hat_full") or tuples whose first element is the artifact
+    name (("coords", k, method, key-fingerprint)). ``misses[key]`` counts
+    builds, ``hits[key]`` counts reuses.
+    """
+
+    def __init__(self):
+        self._store = {}
+        self.hits = Counter()
+        self.misses = Counter()
+
+    def get(self, key, build):
+        """The cached value for ``key``, building (and counting a miss) on
+        first use."""
+        if key in self._store:
+            self.hits[key] += 1
+        else:
+            self.misses[key] += 1
+            self._store[key] = build()
+        return self._store[key]
+
+    def counts(self, key) -> tuple:
+        """(hits, misses) for one key."""
+        return self.hits[key], self.misses[key]
+
+    def build_count(self, artifact: str) -> int:
+        """Total builds of an artifact family (e.g. every ("coords", ...)
+        entry counts toward "coords")."""
+        return sum(c for k, c in self.misses.items()
+                   if (k if isinstance(k, str) else k[0]) == artifact)
+
+    def keys(self):
+        return self._store.keys()
+
+    def __contains__(self, key):
+        return key in self._store
+
+    def __len__(self):
+        return len(self._store)
+
+
+def _key_fingerprint(key) -> tuple:
+    """Hashable identity of a PRNG key, for cache keys."""
+    try:
+        data = jax.random.key_data(key)
+    except Exception:                    # raw uint32 key array
+        data = key
+    return tuple(int(v) for v in np.asarray(data).ravel())
+
+
+class Workspace:
+    """One distance matrix + one ExecConfig + a HoistCache = a session.
+
+    ``dm`` may be a validated ``DistanceMatrix`` (trusted, per the paper's
+    §4.3 validation caching) or a raw square array (validated here, once,
+    via the fused single-pass check). The matrix is canonicalized to fp32
+    and optionally pinned to ``config.device``; every analysis method then
+    serves off the shared cache. See the module docstring for the artifact
+    inventory.
+    """
+
+    def __init__(self, dm: Union[DistanceMatrix, jax.Array, np.ndarray],
+                 config: Optional[ExecConfig] = None, validate: bool = True):
+        self.config = config if config is not None else ExecConfig()
+        if not isinstance(dm, DistanceMatrix):
+            dm = DistanceMatrix(jnp.asarray(dm), validate=validate)
+        elif validate and not dm._validated:
+            # a DistanceMatrix built with validate=False is NOT trusted
+            # just for its wrapper type — the session's validate flag
+            # decides, exactly as for a raw array
+            dm = DistanceMatrix(dm.data, ids=dm.ids, validate=True)
+        data = dm.data
+        if data.dtype != jnp.float32:
+            data = data.astype(jnp.float32)
+        if self.config.device is not None:
+            data = jax.device_put(data, self.config.device)
+        if data is dm.data and dm._validated:
+            self._dm = dm
+        else:
+            # the session matrix is trusted once admitted — whether by the
+            # validation pass above, by the source DistanceMatrix's own
+            # cached validation, or by an explicit validate=False opt-out —
+            # so downstream copies (e.g. inside pcoa) never revalidate
+            self._dm = DistanceMatrix(data, ids=dm.ids,
+                                      _skip_validation=True)
+        self.n = len(self._dm)
+        self.cache = HoistCache()
+
+    # -- canonical views ----------------------------------------------------
+    @property
+    def dm(self) -> DistanceMatrix:
+        return self._dm
+
+    @property
+    def data(self) -> jax.Array:
+        return self._dm.data
+
+    # -- shared hoisted artifacts -------------------------------------------
+    def operator(self) -> CenteredGramOperator:
+        """The matrix-free centered-Gram operator: row/global means of
+        E = −½D∘D hoisted in ONE read of D."""
+        return self.cache.get("operator", lambda: (
+            CenteredGramOperator.from_distance(
+                self.data, block=self.config.block,
+                impl=self.config.matvec_impl,
+                interpret=self.config.interpret)))
+
+    def gram(self) -> jax.Array:
+        """The materialized Gower-centered matrix (PERMANOVA's hoist; the
+        eigh / materialized-ordination paths), via config.centering_impl."""
+        from repro.core.pcoa import materialized_gram
+        return self.cache.get("gram", lambda: materialized_gram(
+            self.data, self.config.centering_impl, self.config.mesh))
+
+    def ranks(self) -> dict:
+        """ANOSIM's rank transform: the O(m log m) sort, run once."""
+        return self.cache.get("ranks",
+                              lambda: rank_transform(self.data, self.n))
+
+    def moments(self) -> dict:
+        """Condensed normalization moments (centered norm + the
+        centered-normalized vector, O(m)) — the shared currency of the
+        Mantel family's x-side."""
+        return self.cache.get("moments",
+                              lambda: condensed_moments(self.data, self.n))
+
+    def hat_full(self) -> jax.Array:
+        """Square symmetric centered-normalized form (diag 0) — the
+        Mantel family's y-side hoist, O(n²), built only when this matrix
+        is actually used as a fixed side."""
+        return self.cache.get("hat_full",
+                              lambda: hat_square(self.moments(), self.n))
+
+    # -- analyses -----------------------------------------------------------
+    def pcoa(self, dimensions: int = 10, method: str = "fsvd",
+             key=None) -> OrdinationResult:
+        """Principal Coordinates Analysis off the cached operator/gram.
+
+        Full ``OrdinationResult`` objects are cached per
+        (dimensions, method, key), so ``ws.permdisp`` reuses the exact
+        coordinates a previous ``ws.pcoa`` produced.
+        """
+        k = resolve_dimensions(dimensions, self.n)
+        key = as_key(key, default=42)
+        fp = _key_fingerprint(key) if method == "fsvd" else None
+        cache_key = ("coords", k, method, fp)
+
+        def build():
+            kw = {}
+            if method == "eigh" or (method == "fsvd"
+                                    and self.config.materialize):
+                kw["gram"] = self.gram()
+            else:
+                # matrix-free paths — including the distributed matvec,
+                # whose exact trace() comes off the same hoisted means
+                kw["operator"] = self.operator()
+            return _pcoa(self._dm, dimensions=k, method=method, key=key,
+                         config=self.config, **kw)
+
+        return self.cache.get(cache_key, build)
+
+    def permanova(self, grouping, permutations: int = 999, key=None,
+                  batch_size: Optional[int] = None) -> PermutationTestResult:
+        """PERMANOVA off the cached Gower centering (one-sided, greater)."""
+        codes, num_groups = self._codes(grouping)
+        stat = PermanovaStatistic(self.data, codes, self.n, num_groups,
+                                  pre={"g": self.gram()})
+        return engine.permutation_test(
+            stat, permutations, key, alternative="greater",
+            batch_size=self.config.resolve_batch_size(batch_size, 32),
+            config=self.config, method="permanova")
+
+    def anosim(self, grouping, permutations: int = 999, key=None,
+               batch_size: Optional[int] = None) -> PermutationTestResult:
+        """ANOSIM off the cached rank transform (one-sided, greater)."""
+        codes, num_groups = self._codes(grouping)
+        stat = AnosimStatistic(self.data, codes, self.n, num_groups,
+                               pre=self.ranks())
+        return engine.permutation_test(
+            stat, permutations, key, alternative="greater",
+            batch_size=self.config.resolve_batch_size(batch_size, 32),
+            config=self.config, method="anosim")
+
+    def permdisp(self, grouping, permutations: int = 999, key=None,
+                 dimensions: Optional[int] = None, method: str = "fsvd",
+                 batch_size: Optional[int] = None) -> PermutationTestResult:
+        """PERMDISP off the cached ordination (one-sided, greater).
+
+        The coordinate hoist is shared with ``ws.pcoa`` at matching
+        (dimensions, method) — the whole ordination is computed at most
+        once per session."""
+        codes, num_groups = self._codes(grouping)
+        dims = resolve_dimensions(dimensions, self.n)
+        coords = self.pcoa(dimensions=dims, method=method).coordinates
+        stat = PermdispStatistic(coords, codes, self.n, num_groups)
+        return engine.permutation_test(
+            stat, permutations, key, alternative="greater",
+            batch_size=self.config.resolve_batch_size(batch_size, 32),
+            config=self.config, method="permdisp")
+
+    def mantel(self, other, permutations: int = 999, key=None,
+               alternative: str = "two-sided",
+               batch_size: Optional[int] = None) -> PermutationTestResult:
+        """Mantel test of this matrix (permuted side) against ``other``
+        (a Workspace, DistanceMatrix or raw array; held fixed). Both
+        sides' normalization hoists come from their sessions' caches."""
+        other = self._coerce(other)
+        if other.n != self.n:
+            raise ValueError("x and y must have the same shape")
+        pre = {"normxm": self.moments()["norm"],
+               "y_full": other.hat_full()}
+        stat = MantelStatistic(self.data, other.data, self.n, pre=pre)
+        return engine.permutation_test(
+            stat, permutations, key, alternative=alternative,
+            batch_size=self.config.resolve_batch_size(batch_size, 8),
+            config=self.config, method="mantel")
+
+    def partial_mantel(self, other, control, permutations: int = 999,
+                       key=None, alternative: str = "two-sided",
+                       batch_size: Optional[int] = None
+                       ) -> PermutationTestResult:
+        """Partial Mantel of this matrix against ``other``, controlling
+        for ``control``; ŷ is residualized from cached moments. Routes
+        through the Pallas reduction when ``config.kernel == "pallas"``."""
+        y, z = self._coerce(other), self._coerce(control)
+        if not (self.n == y.n == z.n):
+            raise ValueError("x, y and z must have the same shape")
+        ym, zm = y.moments(), z.moments()
+        r_yz = jnp.dot(ym["hat"], zm["hat"])
+        # eager degeneracy check (can't raise inside the jitted engine):
+        # |r_yz|→1 makes the residualization 0/0, NaN-ing the whole null.
+        # 1e-5, not 1e-6: an fp32 self-correlation rounds to 1-r² as large
+        # as ~1e-6, and any genuine r_yz this close is numerically useless
+        r = float(r_yz)
+        if 1.0 - r * r < 1e-5:
+            raise ValueError(
+                f"y and z are (nearly) collinear (r_yz={r:.6f}); the "
+                f"partial correlation is undefined — use the plain Mantel "
+                f"test")
+        denom = jnp.sqrt(1.0 - r_yz * r_yz)
+        z_full = z.hat_full()
+        pre = {"normxm": self.moments()["norm"], "r_yz": r_yz,
+               "y_res_full": (y.hat_full() - r_yz * z_full) / denom,
+               "z_full": z_full}
+        if self.config.kernel == "pallas":
+            stat = PartialMantelPallasStatistic(
+                self.data, y.data, z.data, self.n, pre=pre,
+                block=self.config.block, interpret=self.config.interpret)
+        else:
+            stat = PartialMantelStatistic(self.data, y.data, z.data,
+                                          self.n, pre=pre)
+        return engine.permutation_test(
+            stat, permutations, key, alternative=alternative,
+            batch_size=self.config.resolve_batch_size(batch_size, 8),
+            config=self.config, method="partial_mantel")
+
+    # -- plumbing -----------------------------------------------------------
+    def _codes(self, grouping):
+        codes, num_groups = engine.encode_grouping(grouping)
+        if codes.size != self.n:
+            raise ValueError("grouping length does not match distance "
+                             "matrix")
+        return jnp.asarray(codes), num_groups
+
+    def _coerce(self, other) -> "Workspace":
+        """Other operands join the session: an existing Workspace keeps its
+        own cache; anything else gets a one-shot Workspace on this
+        session's config. A DistanceMatrix's validation status is trusted
+        as constructed (paper §4.3 — exactly what the pre-session free
+        functions did); raw arrays are validated on admission."""
+        if isinstance(other, Workspace):
+            return other
+        return Workspace(other, config=self.config,
+                         validate=not isinstance(other, DistanceMatrix))
+
+    def __repr__(self):
+        return (f"Workspace(n={self.n}, cached={sorted(map(str, self.cache.keys()))}, "
+                f"config={self.config})")

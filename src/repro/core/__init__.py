@@ -25,8 +25,10 @@ from repro.core.operators import (
     CenteredGramOperator,
     centered_gram_matvec_distributed,
 )
-from repro.core.mantel import mantel, mantel_distributed, mantel_ref, pearsonr_ref
-from repro.core.pcoa import PCoAResults, pcoa
+from repro.core.mantel import (condensed_moments, hat_square, mantel,
+                               mantel_distributed, mantel_ref, pearsonr_ref)
+from repro.core.pcoa import (OrdinationResult, PCoAResults,
+                             materialized_gram, pcoa, resolve_dimensions)
 
 __all__ = [
     "DistanceMatrix", "DistanceMatrixError", "condensed_to_square",
@@ -36,6 +38,8 @@ __all__ = [
     "center_distance_matrix", "center_distance_matrix_blocked",
     "center_distance_matrix_distributed", "center_distance_matrix_ref",
     "CenteredGramOperator", "centered_gram_matvec_distributed",
-    "mantel", "mantel_distributed", "mantel_ref", "pearsonr_ref",
-    "PCoAResults", "pcoa",
+    "condensed_moments", "hat_square", "mantel", "mantel_distributed",
+    "mantel_ref", "pearsonr_ref",
+    "OrdinationResult", "PCoAResults", "materialized_gram", "pcoa",
+    "resolve_dimensions",
 ]

@@ -61,11 +61,10 @@ _permutation_orders = engine.permutation_orders    # owned by the engine now
 
 
 def mantel_ref(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
-               key: Optional[jax.Array] = None, alternative: str = "two-sided"):
+               key=None, alternative: str = "two-sided"):
     """Original implementation: the permuted matrix is fully materialized and
     pearsonr re-derives mean/norm from scratch every iteration."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = engine.as_key(key)
     x_flat = x.condensed_form()
     y_flat = y.condensed_form()
     orig_stat = pearsonr_ref(x_flat, y_flat)
@@ -82,17 +81,47 @@ def mantel_ref(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
 # --------------------------------------------------------------------------
 # Algorithm 5 — hoisted + fused mantel, as an engine Statistic
 # --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n",))
+def condensed_moments(data: jax.Array, n: int) -> dict:
+    """The O(m) permutation-invariant moments of ONE matrix, cacheable per
+    session: centered-condensed norm (the x-side hoist) and the centered-
+    normalized condensed vector. Every Mantel-family hoist is assembled
+    from these, so a Workspace computes them once per matrix — not once
+    per test. The y-side's square symmetric form is the separate (O(n²))
+    ``hat_square`` build, cached under its own key so a matrix used only
+    as the permuted x-side never pays for it."""
+    iu = np.triu_indices(n, k=1)
+    flat = data[iu]
+    centered = flat - flat.mean()
+    norm = jnp.linalg.norm(centered)
+    return {"norm": norm, "hat": centered / norm}
+
+
+def hat_square(moments: dict, n: int) -> jax.Array:
+    """Square symmetric form (diag 0) of the centered-normalized vector —
+    the y-side hoist of every Mantel-family inner product."""
+    return condensed_to_square(moments["hat"], n)
+
+
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["x", "y"], meta_fields=["n"])
+         data_fields=["x", "y", "pre"], meta_fields=["n"])
 @dataclasses.dataclass
 class MantelStatistic:
-    """Pearson r between permuted x and fixed y, hoisting split per §4.2."""
+    """Pearson r between permuted x and fixed y, hoisting split per §4.2.
+
+    ``pre`` optionally carries the session-level hoist
+    (``{"normxm": ..., "y_full": ...}`` assembled from two Workspaces'
+    cached ``condensed_moments``) so repeated tests against one matrix
+    skip the per-test normalization passes."""
 
     x: jax.Array           # (n, n) permuted matrix
     y: jax.Array           # (n, n) held fixed
     n: int
+    pre: Optional[dict] = None
 
     def hoist(self):
+        if self.pre is not None:
+            return dict(self.pre)
         iu = np.triu_indices(self.n, k=1)
         x_flat = self.x[iu]
         xm = x_flat - x_flat.mean()
@@ -117,15 +146,18 @@ def _finish(orig_stat, permuted_stats, permutations, alternative, n):
 
 
 def mantel(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
-           key: Optional[jax.Array] = None, alternative: str = "two-sided"):
+           key=None, alternative: str = "two-sided"):
     """Cache-optimized Mantel test (paper Algorithm 5). Same interface and
-    semantics as ``mantel_ref``; ~100x less memory traffic. Thin client of
-    ``repro.stats.engine.permutation_test``."""
-    if len(x) != len(y):
-        raise ValueError("x and y must have the same shape")
-    r = engine.permutation_test(
-        MantelStatistic(x.data, y.data, len(x)),
-        permutations=permutations, key=key, alternative=alternative)
+    semantics as ``mantel_ref``; ~100x less memory traffic. Thin wrapper
+    over a one-shot ``api.Workspace`` (which is itself a client of
+    ``repro.stats.engine.permutation_test``) — identical p-values per key;
+    a session testing one matrix against several should hold its own
+    Workspace so the normalization hoists are shared."""
+    from repro.api.workspace import Workspace
+    # validate=False: trust the DistanceMatrix as constructed, exactly like
+    # the pre-session implementation that read x.data directly
+    r = Workspace(x, validate=False).mantel(y, permutations=permutations, key=key,
+                            alternative=alternative)
     return r.statistic, r.p_value, r.sample_size
 
 
@@ -148,8 +180,7 @@ def mantel_distributed(x: DistanceMatrix, y: DistanceMatrix, mesh,
     from jax.sharding import PartitionSpec as P
     from repro.stats.engine import _shard_map
 
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = engine.as_key(key)
     n = len(x)
     x_data, y_data = x.data, y.data
 

@@ -40,25 +40,41 @@ only for the all-zero matrix, where the proportions are defined as 0.
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.config import ExecConfig
+from repro.api.results import OrdinationResult
 from repro.core import centering
 from repro.core.distance_matrix import DistanceMatrix
 from repro.core.operators import (CenteredGramOperator,
                                   centered_gram_matvec_distributed)
 
+# Legacy name for the unified ordination result (same class; the api
+# redesign moved it to repro.api.results and added the recorded RNG key).
+PCoAResults = OrdinationResult
 
-@dataclasses.dataclass
-class PCoAResults:
-    coordinates: jax.Array          # (n, k) — samples in ordination space
-    eigenvalues: jax.Array          # (k,)
-    proportion_explained: jax.Array # (k,)
-    method: str = "fsvd"
+
+def resolve_dimensions(dimensions: Optional[int], n: int) -> int:
+    """THE validation rule for requested ordination dimensionality.
+
+    ``None`` means "all axes" (n - 1, scikit-bio's PERMDISP convention);
+    ``dimensions <= 0`` raises; ``dimensions > n`` clamps to n. Both the
+    fsvd and eigh paths (and permdisp's forwarding) route through this one
+    helper — previously fsvd and eigh diverged on non-positive input
+    (negative k silently sliced from the *bottom* of the spectrum).
+    """
+    if dimensions is None:
+        return max(n - 1, 1)
+    d = int(dimensions)
+    if d != dimensions:
+        raise ValueError(f"dimensions must be an integer, got {dimensions!r}")
+    if d <= 0:
+        raise ValueError(f"dimensions must be positive, got {d}")
+    return min(d, n)
 
 
 # --------------------------------------------------------------------------
@@ -115,7 +131,11 @@ def _exact_eigh(a: jax.Array, k: int):
 # --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
-def _materialized_gram(dm_data: jax.Array, centering_impl: str, mesh):
+def materialized_gram(dm_data: jax.Array, centering_impl: str = "fused",
+                      mesh=None) -> jax.Array:
+    """The full Gower-centered matrix via the selected centering impl —
+    the one entry point PERMANOVA's hoist and the eigh/materialized
+    ordination paths share (so a Workspace can cache exactly one)."""
     if centering_impl == "ref":
         return centering.center_distance_matrix_ref(dm_data)
     if centering_impl == "fused":
@@ -128,48 +148,83 @@ def _materialized_gram(dm_data: jax.Array, centering_impl: str, mesh):
 
 
 def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
-         key: Optional[jax.Array] = None, mesh=None,
+         key=None, mesh=None,
          centering_impl: str = "fused", materialize: bool = False,
-         matvec_impl: str = "xla", block: int = 256) -> PCoAResults:
+         matvec_impl: str = "xla", block: int = 256,
+         config: Optional[ExecConfig] = None,
+         operator: Optional[CenteredGramOperator] = None,
+         gram: Optional[jax.Array] = None) -> OrdinationResult:
     """Principal Coordinates Analysis of a distance matrix.
 
     ``method="fsvd"`` (default) runs **matrix-free** against a
     ``CenteredGramOperator`` — no n×n intermediate is ever written; pass
     ``materialize=True`` for the legacy materialize-then-solve path (the
     benchmark baseline). ``method="eigh"`` is the exact oracle and always
-    materializes. ``centering_impl`` ("ref" | "fused" | "distributed")
-    selects the centering for materialized paths; with
-    ``materialize=False`` only "distributed" changes behaviour, routing
-    each matvec through the shard_map mesh. ``matvec_impl``: "xla"
-    (row-blocked) | "pallas" (``kernels.center_matvec``).
+    materializes.
+
+    Execution knobs resolve from ``config`` (an ``api.ExecConfig``) when
+    given; the legacy kwargs (``mesh``/``centering_impl``/``materialize``/
+    ``matvec_impl``/``block``) are kept for compatibility and are ignored
+    when ``config`` is present. ``key`` accepts a PRNG key or int seed
+    (``stats.engine.as_key``; None -> the documented seed 42). A Workspace
+    passes its cached ``operator`` (matrix-free paths) or ``gram`` (the
+    materialized Gower matrix, eigh/materialized paths) so the O(n²)
+    hoists run once per session, not once per call; ``dimensions`` is
+    validated by ``resolve_dimensions`` (<= 0 raises, > n clamps)
+    identically on every path.
     """
-    if key is None:
-        key = jax.random.PRNGKey(42)
+    from repro.stats.engine import as_key
+    cfg = config if config is not None else ExecConfig(
+        mesh=mesh, centering_impl=centering_impl, materialize=materialize,
+        matvec_impl=matvec_impl, block=block)
+    key = as_key(key, default=42)
+
+    def _gram(data):
+        return gram if gram is not None else \
+            materialized_gram(data, cfg.centering_impl, cfg.mesh)
+
+    # a prebuilt artifact the taken path would ignore is a caller error —
+    # silently dropping the O(n²) hoist they paid for would defeat the
+    # entire point of passing it
+    needs_gram = method == "eigh" or (method == "fsvd" and cfg.materialize)
+    if gram is not None and not needs_gram:
+        raise ValueError("a prebuilt gram is only consumed by eigh / "
+                         "materialized paths; this call runs matrix-free "
+                         "(pass operator= instead)")
+    if operator is not None and needs_gram:
+        raise ValueError("a prebuilt operator is only consumed by the "
+                         "matrix-free fsvd path (pass gram= instead)")
+
     # scikit-bio's pcoa makes an internal copy of the DistanceMatrix — the
     # paper's validation-caching means this copy is free of revalidation.
     dm = dm.copy()
     n = len(dm)
-    k = min(dimensions, n)
+    k = resolve_dimensions(dimensions, n)
 
     if method == "eigh":
-        centered = _materialized_gram(dm.data, centering_impl, mesh)
+        centered = _gram(dm.data)
         evals, evecs = _exact_eigh(centered, k)
         total = jnp.trace(centered)          # exact: the matrix exists
+        key = None                           # deterministic — no RNG used
     elif method == "fsvd":
-        if materialize:
-            centered = _materialized_gram(dm.data, centering_impl, mesh)
+        if cfg.materialize:
+            centered = _gram(dm.data)
             evals, evecs = _randomized_eigh(centered, key, k)
             total = jnp.trace(centered)
-        elif centering_impl == "distributed":
-            if mesh is None:
+        elif cfg.centering_impl == "distributed":
+            if cfg.mesh is None:
                 raise ValueError("distributed matvec requires a mesh")
             evals, evecs = _subspace_iteration(
-                lambda x: centered_gram_matvec_distributed(dm.data, x, mesh),
+                lambda x: centered_gram_matvec_distributed(dm.data, x,
+                                                           cfg.mesh),
                 n, dm.data.dtype, key, k, oversample=10, power_iters=2)
-            total = CenteredGramOperator.from_distance(dm.data).trace()
+            total = (operator if operator is not None else
+                     CenteredGramOperator.from_distance(dm.data)).trace()
         else:
-            op = CenteredGramOperator.from_distance(dm.data, block=block,
-                                                    impl=matvec_impl)
+            op = operator if operator is not None else \
+                CenteredGramOperator.from_distance(
+                    dm.data, block=cfg.block, impl=cfg.matvec_impl,
+                    interpret=cfg.interpret)
             evals, evecs = _randomized_eigh_matfree(op, key, k)
             total = op.trace()
     else:
@@ -184,5 +239,6 @@ def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
     # silently overstate every proportion. tr(F) = 0 only for the all-zero
     # matrix.
     proportion = jnp.where(total > 0, pos / total, jnp.zeros_like(pos))
-    return PCoAResults(coordinates=coordinates, eigenvalues=evals,
-                       proportion_explained=proportion, method=method)
+    return OrdinationResult(coordinates=coordinates, eigenvalues=evals,
+                            proportion_explained=proportion, method=method,
+                            key=key)

@@ -31,11 +31,13 @@ multi-pass evaluation; ``benchmarks/bench_stats.py`` sweeps ref vs fused.
 from repro.stats.engine import (
     PermutationTestResult,
     Statistic,
+    as_key,
     permutation_orders,
     permutation_test,
     permutation_test_distributed,
 )
-from repro.stats.anosim import AnosimStatistic, anosim, anosim_ref
+from repro.stats.anosim import AnosimStatistic, anosim, anosim_ref, \
+    rank_transform
 from repro.stats.partial_mantel import (
     PartialMantelPallasStatistic,
     PartialMantelStatistic,
@@ -50,9 +52,9 @@ from repro.stats.permanova import (
 from repro.stats.permdisp import PermdispStatistic, permdisp, permdisp_ref
 
 __all__ = [
-    "PermutationTestResult", "Statistic", "permutation_orders",
+    "PermutationTestResult", "Statistic", "as_key", "permutation_orders",
     "permutation_test", "permutation_test_distributed",
-    "AnosimStatistic", "anosim", "anosim_ref",
+    "AnosimStatistic", "anosim", "anosim_ref", "rank_transform",
     "PartialMantelPallasStatistic", "PartialMantelStatistic",
     "partial_mantel", "partial_mantel_ref",
     "PermanovaStatistic", "permanova", "permanova_ref",

@@ -45,27 +45,47 @@ def _rank_average(v: jax.Array) -> jax.Array:
     return 0.5 * (lo + hi + 1).astype(v.dtype)
 
 
+@partial(jax.jit, static_argnames=("n",))
+def rank_transform(dm_data: jax.Array, n: int) -> dict:
+    """The O(m log m) rank hoist, split out so a Workspace can cache it.
+
+    Returns the square symmetric rank matrix (diag 0) and the total rank
+    sum — everything about the ranks that ANOSIM's per-permutation pass
+    consumes. Bitwise-identical whether computed here (once per session)
+    or inside ``AnosimStatistic.hoist`` (once per test)."""
+    iu = np.triu_indices(n, k=1)
+    ranks = _rank_average(dm_data[iu])               # ranked exactly once
+    return {"rank_full": condensed_to_square(ranks, n),
+            "total_sum": jnp.sum(ranks)}
+
+
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["dm", "grouping"], meta_fields=["n", "num_groups"])
+         data_fields=["dm", "grouping", "pre"],
+         meta_fields=["n", "num_groups"])
 @dataclasses.dataclass
 class AnosimStatistic:
-    """Clarke's R with ranks hoisted out of the Monte-Carlo loop."""
+    """Clarke's R with ranks hoisted out of the Monte-Carlo loop.
+
+    ``pre`` optionally carries the session-level rank hoist (the
+    ``rank_transform`` dict from a Workspace's ``HoistCache``) so
+    back-to-back tests on one matrix sort the condensed distances once."""
 
     dm: jax.Array          # (n, n) validated distance matrix
     grouping: jax.Array    # (n,) int group codes in [0, num_groups)
     n: int
     num_groups: int
+    pre: Optional[dict] = None   # optional pre-hoisted rank_transform dict
 
     def hoist(self):
-        iu = np.triu_indices(self.n, k=1)
-        ranks = _rank_average(self.dm[iu])           # ranked exactly once
-        rank_full = condensed_to_square(ranks, self.n)
+        rt = self.pre if self.pre is not None else \
+            rank_transform(self.dm, self.n)
+        rank_full = rt["rank_full"]
         z = jax.nn.one_hot(self.grouping, self.num_groups,
                            dtype=rank_full.dtype)
         sizes = jnp.sum(z, axis=0)
         m = self.n * (self.n - 1) / 2.0
         return {"rank_full": rank_full, "z": z,
-                "total_sum": jnp.sum(ranks),
+                "total_sum": rt["total_sum"],
                 "within_count": jnp.sum(sizes * (sizes - 1)) / 2.0,
                 "between_count": m - jnp.sum(sizes * (sizes - 1)) / 2.0,
                 "divisor": self.n * (self.n - 1) / 4.0}
@@ -79,31 +99,30 @@ class AnosimStatistic:
 
 
 def anosim(dm: DistanceMatrix, grouping, permutations: int = 999,
-           key: Optional[jax.Array] = None,
-           batch_size: int = 32) -> PermutationTestResult:
+           key=None, batch_size: int = 32) -> PermutationTestResult:
     """Hoisted+fused ANOSIM; one-sided (greater), like scikit-bio.
 
-    Default batch 32 (vs mantel's 8): the per-perm operand here is the
-    (n, k) design, not an (n, n) gathered matrix, so a bigger batch
-    amortizes the rank-matrix read at negligible memory cost."""
-    codes, num_groups = engine.encode_grouping(grouping)
-    if codes.size != len(dm):
-        raise ValueError("grouping length does not match distance matrix")
-    stat = AnosimStatistic(dm.data, jnp.asarray(codes), len(dm), num_groups)
-    return engine.permutation_test(stat, permutations, key,
-                                   alternative="greater",
-                                   batch_size=batch_size)
+    Thin wrapper over a one-shot ``api.Workspace`` — identical p-values
+    per key; a session running several tests should hold its own
+    Workspace so the rank hoist is shared. Default batch 32 (vs mantel's
+    8): the per-perm operand here is the (n, k) design, not an (n, n)
+    gathered matrix, so a bigger batch amortizes the rank-matrix read at
+    negligible memory cost."""
+    from repro.api.workspace import Workspace
+    # validate=False: trust the DistanceMatrix as constructed, exactly like
+    # the pre-session implementation that read dm.data directly
+    return Workspace(dm, validate=False).anosim(grouping, permutations=permutations,
+                                key=key, batch_size=batch_size)
 
 
 # --------------------------------------------------------------------------
 # Oracle — scikit-bio's evaluation order, deliberately eager and multi-pass
 # --------------------------------------------------------------------------
 def anosim_ref(dm: DistanceMatrix, grouping, permutations: int = 999,
-               key: Optional[jax.Array] = None) -> PermutationTestResult:
+               key=None) -> PermutationTestResult:
     """Per permutation: rebuild the within mask over all pairs, then two
     masked means — each an eager full-vector pass."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = engine.as_key(key)
     codes, num_groups = engine.encode_grouping(grouping)
     n = len(dm)
     if codes.size != n:

@@ -39,10 +39,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.config import ExecConfig
+
 try:                                    # jax >= 0.6 exports it at top level
     _shard_map = jax.shard_map
 except AttributeError:                  # this container's 0.4.x lineage
     from jax.experimental.shard_map import shard_map as _shard_map
+
+
+# --------------------------------------------------------------------------
+# RNG coercion — THE one documented key-handling rule for every entry point
+# --------------------------------------------------------------------------
+def as_key(key, default: int = 0) -> jax.Array:
+    """Coerce ``key: jax.Array | int | None`` to a jax PRNG key.
+
+    Every permutation-test and ordination entry point accepts any of:
+
+    * ``None``            — the entry point's documented default seed
+                            (``jax.random.PRNGKey(default)``);
+    * a Python/NumPy int  — treated as a seed: ``PRNGKey(int(key))``;
+    * a PRNG key array    — raw ``uint32[2]`` or new-style typed key,
+                            passed through unchanged.
+
+    This is the single home of the coercion rule; before it existed,
+    ``seed`` ints and key arrays were accepted inconsistently across the
+    API. Two calls with ``key=7`` and ``key=jax.random.PRNGKey(7)`` are
+    guaranteed to draw identical permutations.
+    """
+    if key is None:
+        return jax.random.PRNGKey(default)
+    if isinstance(key, (int, np.integer)):
+        return jax.random.PRNGKey(int(key))
+    return jnp.asarray(key)
 
 
 # --------------------------------------------------------------------------
@@ -69,12 +97,20 @@ class Statistic(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class PermutationTestResult:
-    """What every ``repro.stats`` test returns."""
+    """What every ``repro.stats`` test returns.
+
+    ``method`` names the test ("permanova", "anosim", ...) and ``key``
+    records the *resolved* RNG key (post ``as_key``) that drew the
+    permutations — together with ``permutations`` they make the result
+    self-describing and exactly replayable.
+    """
 
     statistic: float
     p_value: float
     sample_size: int
     permutations: int
+    method: str = ""
+    key: Optional[jax.Array] = dataclasses.field(default=None, compare=False)
 
 
 # --------------------------------------------------------------------------
@@ -105,7 +141,8 @@ def count_better(orig_stat: jax.Array, permuted_stats: jax.Array,
 
 
 def finish(orig_stat, permuted_stats, permutations: int, alternative: str,
-           n: int) -> PermutationTestResult:
+           n: int, method: str = "",
+           key: Optional[jax.Array] = None) -> PermutationTestResult:
     """Monte-Carlo p-value with the standard +1 correction. A NaN observed
     statistic propagates to a NaN p-value — NaN comparisons are all False,
     which would otherwise count zero exceedances and report the *most*
@@ -115,7 +152,7 @@ def finish(orig_stat, permuted_stats, permutations: int, alternative: str,
     orig_stat = float(orig_stat)
     return PermutationTestResult(
         orig_stat, float("nan") if np.isnan(orig_stat) else float(p_value),
-        n, permutations)
+        n, permutations, method, key)
 
 
 # --------------------------------------------------------------------------
@@ -158,17 +195,23 @@ def _null_distribution(stat, key, permutations: int, batch_size: int):
 
 
 def permutation_test(stat: Statistic, permutations: int = 999,
-                     key: Optional[jax.Array] = None,
-                     alternative: str = "two-sided",
-                     batch_size: int = 8) -> PermutationTestResult:
-    """Run a hoisted+fused Monte-Carlo permutation test for ``stat``."""
+                     key=None, alternative: str = "two-sided",
+                     batch_size: Optional[int] = None,
+                     config: Optional[ExecConfig] = None,
+                     method: str = "") -> PermutationTestResult:
+    """Run a hoisted+fused Monte-Carlo permutation test for ``stat``.
+
+    ``key`` follows the unified coercion rule (``as_key``: key array, int
+    seed, or None -> PRNGKey(0)). ``batch_size`` resolves as explicit arg >
+    ``config.batch_size`` > 8; ``method`` is recorded on the result.
+    """
     if alternative not in ("two-sided", "greater", "less"):
         raise ValueError(f"unknown alternative {alternative!r}")
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    observed, permuted = _null_distribution(stat, key, permutations,
-                                            batch_size)
-    return finish(observed, permuted, permutations, alternative, stat.n)
+    key = as_key(key)
+    bs = (config or ExecConfig()).resolve_batch_size(batch_size, 8)
+    observed, permuted = _null_distribution(stat, key, permutations, bs)
+    return finish(observed, permuted, permutations, alternative, stat.n,
+                  method=method, key=key)
 
 
 # --------------------------------------------------------------------------
@@ -176,10 +219,12 @@ def permutation_test(stat: Statistic, permutations: int = 999,
 # --------------------------------------------------------------------------
 def permutation_test_distributed(stat: Statistic, mesh,
                                  permutations: int = 1024,
-                                 key: Optional[jax.Array] = None,
+                                 key=None,
                                  alternative: str = "two-sided",
                                  perm_axes=("data",),
-                                 batch_size: int = 8) -> PermutationTestResult:
+                                 batch_size: Optional[int] = None,
+                                 config: Optional[ExecConfig] = None,
+                                 method: str = "") -> PermutationTestResult:
     """Permutation-parallel engine: K/|devices| permutations per device.
 
     The invariants are hoisted once and replicated; each device draws its
@@ -191,8 +236,8 @@ def permutation_test_distributed(stat: Statistic, mesh,
 
     if alternative not in ("two-sided", "greater", "less"):
         raise ValueError(f"unknown alternative {alternative!r}")
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = as_key(key)
+    batch_size = (config or ExecConfig()).resolve_batch_size(batch_size, 8)
 
     n_perm_devices = int(np.prod([mesh.shape[a] for a in perm_axes]))
     if permutations % n_perm_devices:
@@ -224,7 +269,8 @@ def permutation_test_distributed(stat: Statistic, mesh,
         out_specs=P(perm_axes[0] if len(perm_axes) == 1 else perm_axes),
     )
     permuted = f(invariants)
-    return finish(observed, permuted, permutations, alternative, stat.n)
+    return finish(observed, permuted, permutations, alternative, stat.n,
+                  method=method, key=key)
 
 
 # --------------------------------------------------------------------------

@@ -43,17 +43,25 @@ from repro.stats.engine import PermutationTestResult
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["x", "y", "z"], meta_fields=["n"])
+         data_fields=["x", "y", "z", "pre"], meta_fields=["n"])
 @dataclasses.dataclass
 class PartialMantelStatistic:
-    """r_xy·z with ŷ residualized against ẑ once, outside the loop."""
+    """r_xy·z with ŷ residualized against ẑ once, outside the loop.
+
+    ``pre`` optionally carries the session-level hoist (the invariants
+    dict assembled from three Workspaces' cached ``condensed_moments`` by
+    ``Workspace.partial_mantel``) so repeated tests reuse the
+    normalization and residualization passes."""
 
     x: jax.Array           # (n, n) permuted matrix
     y: jax.Array           # (n, n) held fixed
     z: jax.Array           # (n, n) held fixed (the control)
     n: int
+    pre: Optional[dict] = None
 
     def hoist(self):
+        if self.pre is not None:
+            return dict(self.pre)
         iu = np.triu_indices(self.n, k=1)
         x_flat = self.x[iu]
         xm = x_flat - x_flat.mean()
@@ -80,7 +88,7 @@ class PartialMantelStatistic:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["x", "y", "z"],
+         data_fields=["x", "y", "z", "pre"],
          meta_fields=["n", "block", "interpret"])
 @dataclasses.dataclass
 class PartialMantelPallasStatistic(PartialMantelStatistic):
@@ -132,31 +140,23 @@ class PartialMantelPallasStatistic(PartialMantelStatistic):
 
 def partial_mantel(x: DistanceMatrix, y: DistanceMatrix, z: DistanceMatrix,
                    permutations: int = 999,
-                   key: Optional[jax.Array] = None,
+                   key=None,
                    alternative: str = "two-sided",
                    batch_size: int = 8,
                    kernel: str = "xla") -> PermutationTestResult:
     """Hoisted+fused partial Mantel. ``kernel="pallas"`` routes the two
     inner products through the batched Pallas reduction (interpret mode on
-    CPU; the TPU-native path at scale)."""
-    if not (len(x) == len(y) == len(z)):
-        raise ValueError("x, y and z must have the same shape")
-    # eager degeneracy check (can't raise inside the jitted hoist): |r_yz|→1
-    # makes the residualization 0/0 and the whole null distribution NaN
-    from repro.core.mantel import pearsonr_ref
-    r_yz = float(pearsonr_ref(y.condensed_form(), z.condensed_form()))
-    if 1.0 - r_yz * r_yz < 1e-6:
-        raise ValueError(
-            f"y and z are (nearly) collinear (r_yz={r_yz:.6f}); the partial "
-            f"correlation is undefined — use the plain Mantel test")
-    if kernel == "pallas":
-        stat = PartialMantelPallasStatistic(x.data, y.data, z.data, len(x))
-    elif kernel == "xla":
-        stat = PartialMantelStatistic(x.data, y.data, z.data, len(x))
-    else:
-        raise ValueError(f"unknown kernel {kernel!r}")
-    return engine.permutation_test(stat, permutations, key, alternative,
-                                   batch_size)
+    CPU; the TPU-native path at scale). Thin wrapper over a one-shot
+    ``api.Workspace`` — identical p-values per key; sessions hold their
+    own Workspace to share the normalization hoists."""
+    from repro.api.config import ExecConfig
+    from repro.api.workspace import Workspace
+    cfg = ExecConfig(kernel=kernel)      # validates the kernel name too
+    # validate=False: trust the DistanceMatrix as constructed, exactly like
+    # the pre-session implementation that read x.data directly
+    return Workspace(x, config=cfg, validate=False).partial_mantel(
+        y, z, permutations=permutations, key=key, alternative=alternative,
+        batch_size=batch_size)
 
 
 # --------------------------------------------------------------------------
@@ -164,7 +164,7 @@ def partial_mantel(x: DistanceMatrix, y: DistanceMatrix, z: DistanceMatrix,
 # --------------------------------------------------------------------------
 def partial_mantel_ref(x: DistanceMatrix, y: DistanceMatrix,
                        z: DistanceMatrix, permutations: int = 999,
-                       key: Optional[jax.Array] = None,
+                       key=None,
                        alternative: str = "two-sided"
                        ) -> PermutationTestResult:
     """Per permutation: materialize the permuted condensed x and call
@@ -173,8 +173,7 @@ def partial_mantel_ref(x: DistanceMatrix, y: DistanceMatrix,
     # deferred: core.mantel is an engine client, so a top-level import here
     # would close the stats ↔ core.mantel cycle during package init
     from repro.core.mantel import pearsonr_ref
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = engine.as_key(key)
     n = len(x)
     y_flat = y.condensed_form()
     z_flat = z.condensed_form()

@@ -37,18 +37,27 @@ from repro.stats.engine import PermutationTestResult
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["dm", "grouping"], meta_fields=["n", "num_groups"])
+         data_fields=["dm", "grouping", "pre"],
+         meta_fields=["n", "num_groups"])
 @dataclasses.dataclass
 class PermanovaStatistic:
-    """Pseudo-F with the permutation-invariant pieces hoisted."""
+    """Pseudo-F with the permutation-invariant pieces hoisted.
+
+    ``pre`` optionally carries a session-level hoist (``{"g": <centered
+    Gower matrix>}`` from a Workspace's ``HoistCache``) so back-to-back
+    tests on one matrix share the O(n²) centering pass instead of
+    re-deriving it inside every ``hoist``.
+    """
 
     dm: jax.Array          # (n, n) validated distance matrix
     grouping: jax.Array    # (n,) int group codes in [0, num_groups)
     n: int
     num_groups: int
+    pre: Optional[dict] = None   # optional pre-hoisted {"g": ...}
 
     def hoist(self):
-        g = center_distance_matrix(self.dm)          # fused: 2 reads, 2 writes
+        g = self.pre["g"] if self.pre is not None else \
+            center_distance_matrix(self.dm)          # fused: 2 reads, 2 writes
         z = jax.nn.one_hot(self.grouping, self.num_groups, dtype=g.dtype)
         sizes = jnp.sum(z, axis=0)
         return {"g": g, "z": z, "sizes": sizes, "ss_total": jnp.trace(g)}
@@ -64,32 +73,30 @@ class PermanovaStatistic:
 
 
 def permanova(dm: DistanceMatrix, grouping, permutations: int = 999,
-              key: Optional[jax.Array] = None,
-              batch_size: int = 32) -> PermutationTestResult:
+              key=None, batch_size: int = 32) -> PermutationTestResult:
     """Hoisted+fused PERMANOVA; one-sided (greater), like scikit-bio.
 
-    Default batch 32 (vs mantel's 8): the per-perm operand here is the
-    (n, k) design, not an (n, n) gathered matrix, so a bigger batch
-    amortizes the Gower-matrix read at negligible memory cost."""
-    codes, num_groups = engine.encode_grouping(grouping)
-    if codes.size != len(dm):
-        raise ValueError("grouping length does not match distance matrix")
-    stat = PermanovaStatistic(dm.data, jnp.asarray(codes), len(dm),
-                              num_groups)
-    return engine.permutation_test(stat, permutations, key,
-                                   alternative="greater",
-                                   batch_size=batch_size)
+    Thin wrapper over a one-shot ``api.Workspace`` — identical p-values
+    per key; a session running several tests should hold its own
+    Workspace so the centering hoist is shared. Default batch 32 (vs
+    mantel's 8): the per-perm operand here is the (n, k) design, not an
+    (n, n) gathered matrix, so a bigger batch amortizes the Gower-matrix
+    read at negligible memory cost."""
+    from repro.api.workspace import Workspace
+    # validate=False: trust the DistanceMatrix as constructed, exactly like
+    # the pre-session implementation that read dm.data directly
+    return Workspace(dm, validate=False).permanova(grouping, permutations=permutations,
+                                   key=key, batch_size=batch_size)
 
 
 # --------------------------------------------------------------------------
 # Oracle — scikit-bio's evaluation order, deliberately eager and multi-pass
 # --------------------------------------------------------------------------
 def permanova_ref(dm: DistanceMatrix, grouping, permutations: int = 999,
-                  key: Optional[jax.Array] = None) -> PermutationTestResult:
+                  key=None) -> PermutationTestResult:
     """Per permutation: rebuild the pair masks and walk the condensed d²
     vector once per group — each step an eager full-vector pass."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = engine.as_key(key)
     codes, num_groups = engine.encode_grouping(grouping)
     n = len(dm)
     if codes.size != n:

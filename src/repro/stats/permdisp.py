@@ -75,35 +75,32 @@ class PermdispStatistic:
 
 
 def permdisp(dm: DistanceMatrix, grouping, permutations: int = 999,
-             key: Optional[jax.Array] = None,
+             key=None,
              dimensions: Optional[int] = None, method: str = "fsvd",
              batch_size: int = 32) -> PermutationTestResult:
     """Hoisted+fused PERMDISP; one-sided (greater), like scikit-bio.
 
-    ``dimensions=None`` ordinates into the full n−1 axes (scikit-bio's
-    behaviour — exact, but the hoist then runs the range-finder at full
-    rank, O(n²·n)); a small ``dimensions`` (≈10–50) trades a truncated
-    dispersion measure for the skinny-block cost that makes large n
-    tractable. ``method`` is forwarded to ``core.pcoa`` — the default "fsvd" runs
-    matrix-free through ``CenteredGramOperator``, so no n² intermediate is
-    built even once. ``key`` drives only the permutation orders (the fsvd
-    range-finder uses pcoa's fixed internal key), so fused and ref agree
+    Thin wrapper over a one-shot ``api.Workspace`` — identical p-values
+    per key; a session should hold its own Workspace so the ordination
+    hoist is shared with ``ws.pcoa()``. ``dimensions=None`` ordinates into
+    the full n−1 axes (scikit-bio's behaviour — exact, but the hoist then
+    runs the range-finder at full rank, O(n²·n)); a small ``dimensions``
+    (≈10–50) trades a truncated dispersion measure for the skinny-block
+    cost that makes large n tractable. ``method`` is forwarded to
+    ``core.pcoa`` — the default "fsvd" runs matrix-free through
+    ``CenteredGramOperator``, so no n² intermediate is built even once.
+    ``key`` drives only the permutation orders (the fsvd range-finder uses
+    pcoa's fixed internal key), so fused and ref agree
     permutation-for-permutation under one key.
     """
-    # deferred: core.pcoa → core package init → core.mantel → stats; a
-    # top-level import here would close that cycle during package init
-    from repro.core.pcoa import pcoa
-
-    codes, num_groups = engine.encode_grouping(grouping)
-    n = len(dm)
-    if codes.size != n:
-        raise ValueError("grouping length does not match distance matrix")
-    dims = (n - 1) if dimensions is None else min(dimensions, n)
-    coords = pcoa(dm, dimensions=dims, method=method).coordinates
-    stat = PermdispStatistic(coords, jnp.asarray(codes), n, num_groups)
-    return engine.permutation_test(stat, permutations, key,
-                                   alternative="greater",
-                                   batch_size=batch_size)
+    # deferred: workspace imports core+stats; a top-level import here would
+    # close that cycle during package init
+    from repro.api.workspace import Workspace
+    # validate=False: trust the DistanceMatrix as constructed, exactly like
+    # the pre-session implementation that read dm.data directly
+    return Workspace(dm, validate=False).permdisp(grouping, permutations=permutations,
+                                  key=key, dimensions=dimensions,
+                                  method=method, batch_size=batch_size)
 
 
 # --------------------------------------------------------------------------
@@ -117,14 +114,14 @@ def permdisp_ref(dm: DistanceMatrix, grouping, permutations: int = 999,
     from scipy.stats import f_oneway
 
     from repro.core.centering import center_distance_matrix_ref
+    from repro.core.pcoa import resolve_dimensions
 
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = engine.as_key(key)
     codes, num_groups = engine.encode_grouping(grouping)
     n = len(dm)
     if codes.size != n:
         raise ValueError("grouping length does not match distance matrix")
-    dims = (n - 1) if dimensions is None else min(dimensions, n)
+    dims = resolve_dimensions(dimensions, n)
 
     centered = np.asarray(center_distance_matrix_ref(dm.data),
                           dtype=np.float64)

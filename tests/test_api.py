@@ -1,0 +1,290 @@
+"""repro.api tests: Workspace-routed analyses vs the standalone free
+functions (bitwise golden parity per key), HoistCache hit/miss accounting
+("the O(n²) hoist ran once" as an assertion), ExecConfig validation and
+threading, unified RNG coercion, and the pcoa dimensions regression."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExecConfig, HoistCache, Workspace
+from repro.core import (DistanceMatrix, mantel, pcoa,
+                        random_distance_matrix, resolve_dimensions)
+from repro.stats import (anosim, as_key, partial_mantel, permanova,
+                         permdisp)
+
+KEY = jax.random.PRNGKey(7)
+N = 36
+
+
+def _dm(seed, n=N):
+    return random_distance_matrix(jax.random.PRNGKey(seed), n)
+
+
+def _grouping(n=N, k=3):
+    return np.array([i % k for i in range(n)])
+
+
+# --------------------------------------------------------------------------
+# golden parity: Workspace-routed == standalone, bitwise, same key
+# --------------------------------------------------------------------------
+def test_workspace_matches_standalone_bitwise():
+    """Acceptance: the session API changes how often D is read, never the
+    answer — p-values, statistics and coordinates are bitwise identical
+    to the free functions for the same key."""
+    dm, dm2, dm3, g = _dm(0), _dm(1), _dm(2), _grouping()
+    ws = Workspace(dm)
+
+    w_pcoa = ws.pcoa(dimensions=5)
+    w_perm = ws.permanova(g, permutations=49, key=KEY)
+    w_disp = ws.permdisp(g, permutations=49, key=KEY, dimensions=5)
+    w_anos = ws.anosim(g, permutations=49, key=KEY)
+    w_mant = ws.mantel(dm2, permutations=49, key=KEY)
+    w_pmant = ws.partial_mantel(dm2, dm3, permutations=49, key=KEY)
+
+    s_pcoa = pcoa(dm, dimensions=5)
+    s_perm = permanova(dm, g, permutations=49, key=KEY)
+    s_disp = permdisp(dm, g, permutations=49, key=KEY, dimensions=5)
+    s_anos = anosim(dm, g, permutations=49, key=KEY)
+    s_mant = mantel(dm, dm2, permutations=49, key=KEY)
+    s_pmant = partial_mantel(dm, dm2, dm3, permutations=49, key=KEY)
+
+    np.testing.assert_array_equal(np.asarray(w_pcoa.coordinates),
+                                  np.asarray(s_pcoa.coordinates))
+    np.testing.assert_array_equal(np.asarray(w_pcoa.eigenvalues),
+                                  np.asarray(s_pcoa.eigenvalues))
+    for w, s in [(w_perm, s_perm), (w_disp, s_disp), (w_anos, s_anos),
+                 (w_pmant, s_pmant)]:
+        assert w.statistic == s.statistic
+        assert w.p_value == s.p_value
+    assert (w_mant.statistic, w_mant.p_value, w_mant.sample_size) == s_mant
+
+
+def test_workspace_hoists_run_once():
+    """Acceptance: pcoa + permanova + permdisp + anosim on one Workspace
+    performs each O(n²) centering/rank hoist at most once (miss counters),
+    and repeats are pure cache hits."""
+    dm, g = _dm(3), _grouping()
+    ws = Workspace(dm)
+    ws.pcoa(dimensions=5)
+    ws.permanova(g, permutations=19, key=KEY)
+    ws.permdisp(g, permutations=19, key=KEY, dimensions=5)
+    ws.anosim(g, permutations=19, key=KEY)
+
+    for artifact in ("operator", "gram", "ranks"):
+        assert ws.cache.build_count(artifact) <= 1, artifact
+    assert ws.cache.build_count("coords") == 1      # permdisp reused pcoa's
+    assert ws.cache.counts(("coords", 5, "fsvd",
+                            tuple(np.asarray(jax.random.PRNGKey(42)))))[0] >= 1
+
+    # a second round of the same analyses builds nothing new
+    before = dict(ws.cache.misses)
+    ws.permanova(g, permutations=19, key=KEY)
+    ws.anosim(g, permutations=19, key=KEY)
+    ws.pcoa(dimensions=5)
+    assert dict(ws.cache.misses) == before
+    assert ws.cache.hits["gram"] >= 1
+    assert ws.cache.hits["ranks"] >= 1
+
+
+def test_hoist_cache_counters():
+    c = HoistCache()
+    assert c.get("a", lambda: 41) == 41
+    assert c.get("a", lambda: 99) == 41              # cached, not rebuilt
+    assert c.counts("a") == (1, 1)
+    assert c.build_count("a") == 1
+    assert ("a" in c) and len(c) == 1
+    c.get(("coords", 3), lambda: "x")
+    c.get(("coords", 5), lambda: "y")
+    assert c.build_count("coords") == 2
+
+
+def test_workspace_mantel_shares_both_sides():
+    """Both operands' moments come from their own session caches: testing
+    x against two matrices re-normalizes x zero extra times, a shared
+    y-Workspace is normalized once across sessions, and the permuted
+    x-side never pays for the O(n²) square hat form."""
+    x, y, z = Workspace(_dm(4)), Workspace(_dm(5)), Workspace(_dm(6))
+    x.mantel(y, permutations=19, key=KEY)
+    x.mantel(z, permutations=19, key=KEY)
+    x.partial_mantel(y, z, permutations=19, key=KEY)
+    for ws in (x, y, z):
+        assert ws.cache.build_count("moments") == 1
+    assert x.cache.build_count("hat_full") == 0      # x is only permuted
+    assert y.cache.build_count("hat_full") == 1
+    assert z.cache.build_count("hat_full") == 1
+
+
+# --------------------------------------------------------------------------
+# ExecConfig
+# --------------------------------------------------------------------------
+def test_execconfig_validates():
+    with pytest.raises(ValueError):
+        ExecConfig(matvec_impl="cuda")
+    with pytest.raises(ValueError):
+        ExecConfig(centering_impl="bogus")
+    with pytest.raises(ValueError):
+        ExecConfig(kernel="cuda")
+    with pytest.raises(ValueError):
+        ExecConfig(centering_impl="distributed")     # needs a mesh
+    with pytest.raises(ValueError):
+        ExecConfig(batch_size=0)
+    cfg = ExecConfig(block=128).replace(batch_size=16)
+    assert cfg.block == 128 and cfg.batch_size == 16
+    assert cfg.resolve_batch_size(None, 32) == 16    # config beats default
+    assert cfg.resolve_batch_size(4, 32) == 4        # explicit beats config
+    # leaf-free pytree: hashable, jit-static-safe
+    assert not jax.tree_util.tree_leaves(cfg)
+    assert hash(cfg) == hash(ExecConfig(block=128, batch_size=16))
+
+
+def test_execconfig_threads_through_pallas_paths():
+    """One config switches every kernel choice; results match the xla
+    route (the dispatchers only change the execution schedule)."""
+    dm, g = _dm(8, 24), _grouping(24)
+    cfg = ExecConfig(matvec_impl="pallas", kernel="pallas", block=32)
+    ws, ws_x = Workspace(dm, config=cfg), Workspace(dm)
+    a = ws.pcoa(dimensions=3)
+    b = ws_x.pcoa(dimensions=3)
+    np.testing.assert_allclose(np.asarray(a.coordinates),
+                               np.asarray(b.coordinates), atol=1e-4)
+    pm = ws.partial_mantel(_dm(9, 24), _dm(10, 24), permutations=19, key=KEY)
+    pm_x = ws_x.partial_mantel(_dm(9, 24), _dm(10, 24), permutations=19,
+                               key=KEY)
+    assert abs(pm.statistic - pm_x.statistic) < 1e-5
+    assert pm.p_value == pm_x.p_value
+
+
+def test_workspace_canonicalizes_and_validates():
+    raw = np.asarray(_dm(11).data, dtype=np.float64)
+    ws = Workspace(raw)                              # raw array accepted
+    assert ws.data.dtype == jnp.float32              # canonical fp32
+    assert ws.dm._validated
+    with pytest.raises(Exception):
+        Workspace(raw + np.eye(N))                   # non-hollow rejected
+    with pytest.raises(ValueError):
+        Workspace(_dm(11)).mantel(_dm(12, 20))       # shape mismatch
+    with pytest.raises(ValueError):
+        Workspace(_dm(11)).permanova(_grouping(12))  # grouping mismatch
+
+
+def test_workspace_validate_false_is_consistent():
+    """validate=False admits the matrix once for the whole session — no
+    later analysis revalidates (pcoa's internal copy used to re-run the
+    check the caller explicitly opted out of)."""
+    bad = np.array(_dm(20, 16).data).copy()
+    bad[0, 1] += 0.5                                 # asymmetric on purpose
+    ws = Workspace(bad, validate=False)
+    assert ws.dm._validated                          # trusted once admitted
+    ws.pcoa(dimensions=3)                            # copy() must not raise
+    with pytest.raises(Exception):
+        Workspace(bad)                               # default still rejects
+    # a directly-constructed session validates an unvalidated
+    # DistanceMatrix wrapper just like a raw array...
+    bad_dm = DistanceMatrix(jnp.asarray(bad), validate=False)
+    with pytest.raises(Exception):
+        Workspace(bad_dm)
+    assert Workspace(bad_dm, validate=False).dm._validated
+    # ...but the legacy free functions trust it as constructed, exactly
+    # like the pre-session implementations that read dm.data directly
+    r = permanova(bad_dm, _grouping(16), permutations=9, key=KEY)
+    assert 0.0 < r.p_value <= 1.0
+
+
+def test_workspace_collinear_control_raises():
+    x, y = _dm(13), _dm(14)
+    with pytest.raises(ValueError, match="collinear"):
+        Workspace(x).partial_mantel(y, y, permutations=9)
+
+
+# --------------------------------------------------------------------------
+# unified RNG handling
+# --------------------------------------------------------------------------
+def test_as_key_coercion_rule():
+    np.testing.assert_array_equal(np.asarray(as_key(None, default=5)),
+                                  np.asarray(jax.random.PRNGKey(5)))
+    np.testing.assert_array_equal(np.asarray(as_key(7)),
+                                  np.asarray(jax.random.PRNGKey(7)))
+    np.testing.assert_array_equal(np.asarray(as_key(np.int64(7))),
+                                  np.asarray(jax.random.PRNGKey(7)))
+    np.testing.assert_array_equal(np.asarray(as_key(KEY)), np.asarray(KEY))
+
+
+def test_int_seed_equals_key_everywhere():
+    """`key=7` and `key=PRNGKey(7)` draw identical permutations in every
+    entry point (the one documented coercion rule)."""
+    dm, dm2, g = _dm(15), _dm(16), _grouping()
+    k7 = jax.random.PRNGKey(7)
+    assert permanova(dm, g, 19, 7) == permanova(dm, g, 19, k7)
+    assert anosim(dm, g, 19, 7) == anosim(dm, g, 19, k7)
+    assert mantel(dm, dm2, 19, 7) == mantel(dm, dm2, 19, k7)
+    a = pcoa(dm, dimensions=3, key=7)
+    b = pcoa(dm, dimensions=3, key=k7)
+    np.testing.assert_array_equal(np.asarray(a.coordinates),
+                                  np.asarray(b.coordinates))
+
+
+def test_results_record_method_and_key():
+    dm, g = _dm(17), _grouping()
+    ws = Workspace(dm)
+    r = ws.permanova(g, permutations=19, key=7)
+    assert r.method == "permanova"
+    np.testing.assert_array_equal(np.asarray(r.key),
+                                  np.asarray(jax.random.PRNGKey(7)))
+    o = ws.pcoa(dimensions=3)
+    assert o.method == "fsvd" and o.key is not None
+    assert ws.pcoa(dimensions=3, method="eigh").key is None  # deterministic
+    # results stay plain frozen dataclasses
+    assert dataclasses.is_dataclass(r) and dataclasses.is_dataclass(o)
+
+
+# --------------------------------------------------------------------------
+# pcoa dimensions validation (satellite regression)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["fsvd", "eigh"])
+def test_pcoa_dimensions_validation_consistent(method):
+    """Regression: `dimensions <= 0` raises and `dimensions > n` clamps to
+    n on BOTH solver paths (fsvd used to silently slice from the bottom of
+    the spectrum for negative k)."""
+    dm = _dm(18, 20)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="dimensions"):
+            pcoa(dm, dimensions=bad, method=method)
+        with pytest.raises(ValueError, match="dimensions"):
+            Workspace(dm).pcoa(dimensions=bad, method=method)
+    r = pcoa(dm, dimensions=55, method=method)       # > n clamps to n
+    assert r.coordinates.shape == (20, 20)
+    with pytest.raises(ValueError, match="dimensions"):
+        permdisp(dm, _grouping(20), permutations=9, dimensions=-1)
+
+
+def test_pcoa_rejects_mismatched_prebuilt_artifacts():
+    """A prebuilt hoist the taken path would silently ignore is an error —
+    dropping the O(n²) artifact the caller paid for defeats its point."""
+    from repro.core import CenteredGramOperator, materialized_gram
+    dm = _dm(19, 16)
+    op = CenteredGramOperator.from_distance(dm.data)
+    g = materialized_gram(dm.data)
+    with pytest.raises(ValueError, match="gram"):
+        pcoa(dm, dimensions=3, gram=g)                   # runs matrix-free
+    with pytest.raises(ValueError, match="operator"):
+        pcoa(dm, dimensions=3, method="eigh", operator=op)
+    # matched artifacts are consumed
+    a = pcoa(dm, dimensions=3, operator=op)
+    b = pcoa(dm, dimensions=3)
+    np.testing.assert_array_equal(np.asarray(a.coordinates),
+                                  np.asarray(b.coordinates))
+    pcoa(dm, dimensions=3, method="eigh", gram=g)
+
+
+def test_resolve_dimensions_rule():
+    assert resolve_dimensions(None, 10) == 9         # scikit-bio: all axes
+    assert resolve_dimensions(3, 10) == 3
+    assert resolve_dimensions(99, 10) == 10          # clamp
+    assert resolve_dimensions(None, 1) == 1          # degenerate floor
+    for bad in (0, -1):
+        with pytest.raises(ValueError):
+            resolve_dimensions(bad, 10)
