@@ -1,0 +1,150 @@
+"""--suite dist: feature-table → analysis sessions, fused vs materialized.
+
+``PYTHONPATH=src python -m benchmarks.run --suite dist``
+
+The canonical workload is Sfiligoi-et-al.'s personal-device pipeline one
+step upstream of ``--suite api``: an (n, d) abundance table becomes
+Bray–Curtis distances and immediately feeds PCoA + PERMANOVA. Two modes:
+
+* **fused** — ``Workspace.from_features``: the ``repro.dist`` driver
+  emits CONDENSED distances tile-by-tile with the operator means
+  accumulated during the sweep; PCoA runs matrix-free off the condensed
+  operator and PERMANOVA streams ``op.matvec`` strips. No n×n square
+  matrix is ever allocated.
+* **materialized baseline** — build the square matrix
+  (``pairwise_distances(..., out="square")``), then run the same session
+  through a square-backed Workspace (which additionally hoists the
+  square Gower matrix for PERMANOVA) — exactly what a pdist→squareform→
+  analyze pipeline does.
+
+Per the container-noise rule the tracked quantities are **analytic**:
+peak matrix bytes per mode (condensed m·4 vs square n²·4 + gram n²·4)
+and the n²-pass hoist accounting from the ``HoistCache`` miss counters;
+``bytes_avoided`` — the n×n allocations the fused path never makes — is
+the acceptance artifact. Wall time is recorded but informational (±40%).
+"""
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.api.config import ExecConfig
+from repro.api.workspace import Workspace
+from repro.dist import condensed_size, pairwise_distances
+
+_NUM_GROUPS = 8
+_DIMS = 10
+_FEATURES = 128
+
+# Analytic n²-pass cost of each HoistCache build (n²-sized fp32 passes;
+# the production's O(n·d) feature reads are recorded separately since
+# they are identical in both modes). Mirrors the implementations:
+#   condensed+dist_means — the tiled production writes m = n(n−1)/2 ≈ ½n²
+#       entries once; the means ride the same sweep for free (0 passes)
+#   operator  (fused)    — wraps the production artifacts: free
+#   operator  (baseline) — row/global means: ONE read of square D
+#   square    (baseline) — the n² write of the materialized matrix
+#   gram      (baseline) — fused centering: 2 reads + 2 writes
+#   coords               — 4 fsvd matvecs; each reads condensed (½ pass)
+#       in fused mode, square D (1 pass) in baseline mode
+_PASSES_FUSED = {"condensed": 0.5, "dist_means": 0.0, "operator": 0.0,
+                 "coords": 2.0}
+_PASSES_BASE = {"operator": 1.0, "square": 1.0, "gram": 4.0, "coords": 4.0}
+
+
+def _artifact(key):
+    return key if isinstance(key, str) else key[0]
+
+
+def _accounting(cache, n, table):
+    builds = {}
+    for k, c in cache.misses.items():
+        a = _artifact(k)
+        builds[a] = builds.get(a, 0) + c
+    passes = sum(table[a] * c for a, c in builds.items())
+    return {"builds": builds, "d_passes": passes,
+            "analytic_bytes": passes * n * n * 4}
+
+
+def run(sizes=(2048, 4096), d=_FEATURES, permutations=199,
+        metric="braycurtis", out_json="BENCH_dist.json"):
+    print(f"\n# --suite dist — feature table (n, {d}) → {metric} → "
+          f"pcoa k={_DIMS} + permanova K={permutations}: "
+          f"fused condensed production vs materialize-then-analyze")
+    key = jax.random.PRNGKey(7)
+    results = {}
+    for n in sizes:
+        x = np.abs(np.asarray(
+            jax.random.normal(jax.random.PRNGKey(n), (n, d)))).astype(
+                np.float32)
+        grouping = np.arange(n) % _NUM_GROUPS
+        m = condensed_size(n)
+
+        # -- fused: from_features, square-free ----------------------------
+        ws = Workspace.from_features(x, metric=metric, config=ExecConfig())
+        t0 = time.perf_counter()
+        ws.pcoa(dimensions=_DIMS)
+        ws.permanova(grouping, permutations=permutations, key=key)
+        t_fused = time.perf_counter() - t0
+        assert "square" not in ws.cache, "fused path materialized a square!"
+        fused = _accounting(ws.cache, n, _PASSES_FUSED)
+        fused["peak_matrix_bytes"] = m * 4
+        fused["seconds"] = t_fused
+
+        # -- baseline: square matrix, then the session --------------------
+        t0 = time.perf_counter()
+        square = pairwise_distances(x, metric, out="square")
+        jax.block_until_ready(square)
+        ws2 = Workspace(square, config=ExecConfig(), validate=False)
+        ws2.cache.get("square", lambda: square)   # count the n² build
+        ws2.pcoa(dimensions=_DIMS)
+        ws2.permanova(grouping, permutations=permutations, key=key)
+        t_base = time.perf_counter() - t0
+        base = _accounting(ws2.cache, n, _PASSES_BASE)
+        # square D stays live for the session + the hoisted square Gower
+        base["peak_matrix_bytes"] = 2 * n * n * 4
+        base["seconds"] = t_base
+
+        bytes_avoided = base["peak_matrix_bytes"] - fused["peak_matrix_bytes"]
+        results[n] = {
+            "fused": fused, "baseline": base,
+            "square_bytes": n * n * 4, "condensed_bytes": m * 4,
+            "bytes_avoided": bytes_avoided,
+            "peak_ratio": base["peak_matrix_bytes"]
+            / fused["peak_matrix_bytes"],
+            "traffic_ratio": base["d_passes"] / max(fused["d_passes"],
+                                                    1e-9),
+        }
+        r = results[n]
+        print(f"dist n={n:<6d} fused peak {fused['peak_matrix_bytes'] / 1e6:8.1f} MB"
+              f" ({fused['d_passes']:4.1f} n²-passes)  baseline "
+              f"{base['peak_matrix_bytes'] / 1e6:8.1f} MB "
+              f"({base['d_passes']:4.1f})  -> {r['bytes_avoided'] / 1e6:8.1f} MB"
+              f" of n×n avoided ({r['peak_ratio']:.2f}x peak, "
+              f"{r['traffic_ratio']:.2f}x traffic); wall {t_fused:.2f}s vs "
+              f"{t_base:.2f}s (informational)")
+
+    if out_json:
+        artifact = {
+            "suite": "dist",
+            "metric": metric,
+            "features": d,
+            "dimensions": _DIMS,
+            "permutations": permutations,
+            "num_groups": _NUM_GROUPS,
+            "pass_table_fused": _PASSES_FUSED,
+            "pass_table_baseline": _PASSES_BASE,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "results": {str(n): r for n, r in results.items()},
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,7 @@
 """Benchmark harness — one section per paper table (deliverable (d)).
 
-``PYTHONPATH=src python -m benchmarks.run [--fast] [--suite paper|stats]``
+``PYTHONPATH=src python -m benchmarks.run [--fast|--smoke]
+[--suite paper|stats|pcoa|api|dist]``
 
 Suites:
   paper (default) — the paper's tables:
@@ -18,6 +19,15 @@ Suites:
     for the 4-analysis study battery, one shared Workspace vs standalone
     per-call hoists; writes BENCH_api.json. The gate is the analytic
     traffic ratio, not wall-clock (container timing is ±40% noisy).
+  dist — feature-table sessions: the fused repro.dist condensed
+    production (Workspace.from_features, square-free) vs the
+    materialize-then-analyze baseline at n ∈ {2048, 4096}; writes
+    BENCH_dist.json with the analytic n×n bytes avoided.
+
+``--smoke`` runs the dist + api suites at tiny sizes with NO artifact
+written — the CI guard that the benchmark entry points can't silently
+rot (exercises the same code paths; the tracked BENCH_*.json files are
+only ever written by full-size runs).
 """
 
 import argparse
@@ -25,19 +35,22 @@ import platform
 
 import jax
 
-from benchmarks import bench_api, bench_center, bench_mantel, bench_pcoa, \
-    bench_stats, bench_validation
+from benchmarks import bench_api, bench_center, bench_dist, bench_mantel, \
+    bench_pcoa, bench_stats, bench_validation
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes / fewer repeats")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: dist+api at tiny sizes, no artifacts")
     ap.add_argument("--suite", default="paper",
-                    choices=("paper", "stats", "pcoa", "api"),
+                    choices=("paper", "stats", "pcoa", "api", "dist"),
                     help="paper tables (default), the repro.stats sweep, "
-                         "the matrix-free ordination sweep, or the "
-                         "hoist-once Workspace session accounting")
+                         "the matrix-free ordination sweep, the hoist-once "
+                         "Workspace session accounting, or the fused "
+                         "feature-table distance production")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -45,6 +58,29 @@ def main() -> None:
     print("# paper: Sfiligoi/McDonald/Knight PEARC'21 — sizes scaled to "
           "one CPU core; the measured quantity is the fused-vs-multipass "
           "RATIO (see EXPERIMENTS.md §Benchmarks)")
+
+    if args.smoke:
+        bench_dist.run(sizes=(128, 256), d=32, permutations=49,
+                       out_json=None)
+        bench_api.run(sizes=(128,), permutations=49, out_json=None)
+        print("\n# smoke OK — dist + api suites ran end-to-end "
+              "(no artifacts written)")
+        return
+
+    if args.suite == "dist":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size trajectory file
+            s = bench_dist.run(sizes=(256, 512), d=64, permutations=99,
+                               out_json="BENCH_dist_fast.json")
+        else:
+            s = bench_dist.run()
+        print("\n# summary — n×n bytes avoided, fused / materialized")
+        for n, r in s.items():
+            print(f"dist-session    n={n:<6d} {r['bytes_avoided'] / 1e6:8.1f}"
+                  f" MB avoided ({r['peak_ratio']:.2f}x peak matrix bytes,"
+                  f" {r['traffic_ratio']:.2f}x hoist traffic, analytic)")
+        return
 
     if args.suite == "api":
         if args.fast:

@@ -1,35 +1,41 @@
-"""Community ecology walkthrough — one hoist-once Workspace session.
+"""Community ecology walkthrough — one hoist-once Workspace session,
+opened straight from the raw feature table.
 
-The paper's motivating workload (§1) is microbiome beta-diversity: compute
-distance matrices, then ask statistical questions of them. This example
-runs the full battery on one simulated study — the personal-device-scale
-analysis of Sfiligoi et al. 2021:
+The paper's motivating workload (§1) is microbiome beta-diversity:
+compute distance matrices, then ask statistical questions of them. This
+example runs the full battery on one simulated study — the
+personal-device-scale analysis of Sfiligoi et al. 2021:
 
-    samples from 4 "treatment" groups, two metrics + one confounder
+    samples from 4 "treatment" groups, two measurements + one confounder
       → PCoA        where do the samples sit?    (matrix-free ordination)
       → PERMANOVA   do group centroids differ?        (pseudo-F)
       → PERMDISP    ...or is it just unequal spread?  (dispersion F)
       → ANOSIM      do within < between distances?    (Clarke's R)
-      → Mantel      do the two metrics agree?         (Pearson r)
+      → Mantel      do the two measurements agree?    (Pearson r)
       → partial Mantel   ...controlling for the confounding gradient?
 
-Everything runs through ``repro.api.Workspace`` — the session object that
-finishes the paper's "read the big matrix once" argument *across*
-analyses: the matrix is validated and canonicalized once, and the shared
-O(n²) hoists (operator means, Gower centering, ranks, ordination
-coordinates, normalization moments) are computed on first use and reused
-by every later test in the session (watch the HoistCache summary at the
-end: the second wave of analyses builds nothing). One ``ExecConfig``
-carries every execution knob; every result records its RNG key.
+Everything runs through ``repro.api.Workspace`` — and since the
+``repro.dist`` subsystem, the session starts one step earlier than a
+distance matrix: ``Workspace.from_features`` turns the (n, d) sample
+table into CONDENSED distances tile-by-tile, accumulating the operator
+means during the same sweep, so the first four analyses complete without
+an n×n square distance matrix ever existing (ANOSIM's rank matrix is the
+one square hoist built — it is what the per-permutation gather-matmul
+consumes; watch the printed cache keys: the ``"square"`` distance
+artifact appears only when the Mantel family's gathers demand it). The shared O(n²) hoists are computed on first use and reused
+by every later test; one ``ExecConfig`` carries every execution knob;
+every result records its RNG key.
 
     PYTHONPATH=src python examples/community_analysis.py [--n 2048]
 
 Legacy style (still supported — each call is a thin wrapper over a
 one-shot Workspace, identical p-values per key, but the hoists are NOT
-shared across calls):
+shared across calls, and you build the square matrix yourself):
 
-    from repro.core import mantel, pcoa
+    from scipy.spatial.distance import pdist, squareform   # or repro.dist
+    from repro.core import DistanceMatrix, mantel, pcoa
     from repro.stats import anosim, partial_mantel, permanova, permdisp
+    metric_a = DistanceMatrix(squareform(pdist(table)))
     ord_ = pcoa(metric_a, dimensions=3)
     r = permanova(metric_a, grouping, 999, key)      # re-centers
     r = permdisp(metric_a, grouping, 999, key)       # re-ordinates
@@ -45,49 +51,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ExecConfig, Workspace
-from repro.core import DistanceMatrix
-
-
-def _euclidean_dm(pts):
-    d2 = jnp.sum((pts[:, None] - pts[None, :]) ** 2, -1)
-    d = jnp.sqrt(jnp.maximum(d2, 0.0))
-    d = 0.5 * (d + d.T)
-    return DistanceMatrix(d - jnp.diag(jnp.diag(d)), _skip_validation=True)
 
 
 def simulate_study(key, n, num_groups=4, dim=8):
-    """Two community metrics + a confounding environmental gradient.
+    """Two community measurements + a confounding environmental gradient.
 
-    Sample i sits at (group centroid) + (gradient effect) + noise; metric B
-    is metric A re-measured with noise, and the gradient alone drives the
-    confounder matrix — so partial Mantel should keep A~B strong while a
-    naive Mantel of A vs the gradient matrix is spurious.
+    Sample i sits at (group centroid) + (gradient effect) + noise; table B
+    is table A re-measured with noise, and the gradient alone drives the
+    confounder — so partial Mantel should keep A~B strong while a naive
+    Mantel of A vs the gradient is spurious. Returned as raw (n, d)
+    feature tables: building the distances is part of the workload now.
     """
     k_grp, k_grad, k_a, k_b = jax.random.split(key, 4)
     grouping = np.arange(n) % num_groups
     centroids = 2.0 * jax.random.normal(k_grp, (num_groups, dim))
     gradient = jax.random.normal(k_grad, (n, 1))           # e.g. pH
-    base = (centroids[grouping]
-            + 1.5 * gradient * jnp.ones((1, dim))
-            + jax.random.normal(k_a, (n, dim)))
-    metric_a = _euclidean_dm(base)
-    metric_b = _euclidean_dm(base + 0.3 * jax.random.normal(k_b, (n, dim)))
-    confounder = _euclidean_dm(gradient)
-    return grouping, metric_a, metric_b, confounder
+    table_a = (centroids[grouping]
+               + 1.5 * gradient * jnp.ones((1, dim))
+               + jax.random.normal(k_a, (n, dim)))
+    table_b = table_a + 0.3 * jax.random.normal(k_b, (n, dim))
+    return grouping, table_a, table_b, gradient
 
 
 def main(n: int = 2048, permutations: int = 999):
     key = jax.random.PRNGKey(0)
-    grouping, metric_a, metric_b, confounder = simulate_study(key, n)
+    grouping, table_a, table_b, gradient = simulate_study(key, n)
     test_key = 1                     # int seeds and PRNG keys both accepted
     print(f"== community analysis: {n} samples, 4 groups, K={permutations} ==")
 
-    # one session per matrix: validate + canonicalize once, hoist once.
-    # ExecConfig is where execution knobs would go (matvec_impl="pallas",
+    # one session per measurement: the feature table is validated finite +
+    # canonicalized once, distances are produced condensed with the
+    # operator means fused into the sweep. ExecConfig is where execution
+    # knobs go (metric=..., pairwise_impl="pallas", matvec_impl="pallas",
     # a mesh for the distributed paths, ...) — defaults suit one CPU/TPU.
-    ws = Workspace(metric_a, config=ExecConfig())
-    ws_b = Workspace(metric_b)
-    ws_env = Workspace(confounder)
+    ws = Workspace.from_features(table_a, metric="euclidean",
+                                 config=ExecConfig())
+    ws_b = Workspace.from_features(table_b, metric="euclidean")
+    ws_env = Workspace.from_features(gradient, metric="euclidean")
 
     t0 = time.perf_counter()
     ord_ = ws.pcoa(dimensions=3)                 # matrix-free by default
@@ -112,10 +112,16 @@ def main(n: int = 2048, permutations: int = 999):
     print(f"[3] ANOSIM         R={r.statistic:8.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s)")
 
+    assert "square" not in ws.cache
+    print(f"    -- four analyses done, no n×n square DISTANCE matrix ever "
+          f"existed (ANOSIM's rank matrix is the one square hoist; cached: "
+          f"{sorted(k if isinstance(k, str) else k[0] for k in ws.cache.keys())})")
+
     t0 = time.perf_counter()
     r = ws.mantel(ws_b, permutations, test_key)
     print(f"[4] Mantel A~B     r={r.statistic:8.3f}  p={r.p_value:.4f}  "
-          f"({time.perf_counter() - t0:.2f}s)")
+          f"({time.perf_counter() - t0:.2f}s) — gathers demanded the "
+          f"square: {'square' in ws.cache}")
 
     t0 = time.perf_counter()
     r = ws.mantel(ws_env, permutations, test_key)

@@ -11,6 +11,10 @@ once and reused, not re-derived per entry point.
 
 * ``Workspace(dm, config=ExecConfig(...))`` — validates and canonicalizes
   the matrix once, then serves every analysis off a lazy ``HoistCache``.
+  ``Workspace.from_features(table, metric=...)`` opens the session one
+  step upstream: the ``repro.dist`` driver produces condensed distances
+  tile-by-tile with the operator means fused into the sweep, so the
+  matrix-free analyses never allocate an n×n square.
 * ``ExecConfig``   — the single home for execution knobs that used to be
   scattered per-function kwargs.
 * ``OrdinationResult`` / ``PermutationTestResult`` — the two unified

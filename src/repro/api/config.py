@@ -28,11 +28,17 @@ from typing import Any, Optional
 import jax
 
 
+# mirror of repro.dist.METRICS — kept literal here because this module
+# imports nothing from repro (pinned in sync by tests/test_dist.py)
+_KNOWN_METRICS = ("braycurtis", "canberra", "cityblock", "euclidean",
+                  "jaccard")
+
+
 @partial(jax.tree_util.register_dataclass,
          data_fields=[],
          meta_fields=["matvec_impl", "centering_impl", "materialize",
                       "interpret", "block", "batch_size", "kernel", "mesh",
-                      "device"])
+                      "device", "metric", "pairwise_impl", "feature_block"])
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
     """Execution configuration shared by every analysis entry point.
@@ -75,6 +81,18 @@ class ExecConfig:
     device:
         Optional ``jax.Device`` the Workspace pins its canonical matrix to
         (``None``: wherever jax placed it).
+    metric:
+        Default beta-diversity metric for feature-table sessions
+        (``Workspace.from_features`` with ``metric=None``) — any
+        ``repro.dist`` registry name ("braycurtis", "euclidean",
+        "jaccard", "canberra", "cityblock").
+    pairwise_impl:
+        Backend for the ``repro.dist`` tiled distance production —
+        ``"xla"`` (the ``lax.map`` row-panel fallback, the default) or
+        ``"pallas"`` (the VMEM-tiled ``kernels.pairwise`` kernel).
+    feature_block:
+        Feature-axis chunk of the pairwise metric reduce: bounds the
+        per-tile broadcast term at (rows, cols, feature_block).
     """
 
     matvec_impl: str = "xla"
@@ -86,6 +104,9 @@ class ExecConfig:
     kernel: str = "xla"
     mesh: Optional[Any] = None
     device: Optional[Any] = None
+    metric: str = "braycurtis"
+    pairwise_impl: str = "xla"
+    feature_block: int = 128
 
     def __post_init__(self):
         if self.matvec_impl not in ("xla", "pallas"):
@@ -102,6 +123,15 @@ class ExecConfig:
         if self.batch_size is not None and self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1 or None, "
                              f"got {self.batch_size}")
+        if self.metric not in _KNOWN_METRICS:
+            raise ValueError(f"unknown metric {self.metric!r}; "
+                             f"available: {list(_KNOWN_METRICS)}")
+        if self.pairwise_impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown pairwise_impl "
+                             f"{self.pairwise_impl!r}")
+        if self.feature_block < 1:
+            raise ValueError(f"feature_block must be >= 1, "
+                             f"got {self.feature_block}")
 
     def replace(self, **changes) -> "ExecConfig":
         """A copy with ``changes`` applied (``dataclasses.replace``)."""

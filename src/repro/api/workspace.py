@@ -29,6 +29,18 @@ The legacy free functions (``core.pcoa.pcoa``, ``core.mantel.mantel``,
 ``stats.permanova`` …) are thin wrappers over a one-shot Workspace — same
 signatures, identical p-values per key — so the only thing a session
 changes is how often D is read.
+
+``Workspace.from_features`` extends the session one step upstream: the
+distance matrix itself is produced by the tiled ``repro.dist`` driver in
+CONDENSED layout, with the operator means and Mantel moments accumulated
+during the same sweep — so a feature-table → PCoA → PERMANOVA session
+never materializes an n×n square distance matrix (cache keys
+``"condensed"`` / ``"dist_means"``; hoists that are genuinely square —
+``gram``, ``ranks``' rank matrix — build only their own artifact, and
+the square *distances* appear only when the Mantel gathers or a
+materialized path demand them, under the ``"square"`` key). ``refresh()``
+invalidates the whole cache (generation-counted) when the underlying
+data changes.
 """
 
 from __future__ import annotations
@@ -42,17 +54,23 @@ import numpy as np
 
 from repro.api.config import ExecConfig
 from repro.api.results import OrdinationResult
-from repro.core.distance_matrix import DistanceMatrix
-from repro.core.mantel import MantelStatistic, condensed_moments, hat_square
-from repro.core.operators import CenteredGramOperator
+from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
+from repro.core.mantel import (MantelStatistic, condensed_moments,
+                               hat_square)
+from repro.core.operators import (CenteredGramOperator,
+                                  CondensedCenteredGramOperator)
 from repro.core.pcoa import pcoa as _pcoa
 from repro.core.pcoa import resolve_dimensions
+from repro.core.validation import ensure_finite
+from repro.dist import get_metric, pairwise_condensed
 from repro.stats import engine
-from repro.stats.anosim import AnosimStatistic, rank_transform
+from repro.stats.anosim import (AnosimStatistic, rank_transform,
+                                rank_transform_condensed)
 from repro.stats.engine import PermutationTestResult, as_key
 from repro.stats.partial_mantel import (PartialMantelPallasStatistic,
                                         PartialMantelStatistic)
-from repro.stats.permanova import PermanovaStatistic
+from repro.stats.permanova import (PermanovaOperatorStatistic,
+                                   PermanovaStatistic)
 from repro.stats.permdisp import PermdispStatistic
 
 
@@ -102,6 +120,13 @@ class HoistCache:
         return len(self._store)
 
 
+@jax.jit
+def _centered_normalized(flat, mean, norm):
+    """One fused O(m) pass: the hat vector from the production's fused
+    mean/norm scalars."""
+    return (flat - mean) / norm
+
+
 def _key_fingerprint(key) -> tuple:
     """Hashable identity of a PRNG key, for cache keys."""
     try:
@@ -122,16 +147,64 @@ class Workspace:
     inventory.
     """
 
-    def __init__(self, dm: Union[DistanceMatrix, jax.Array, np.ndarray],
-                 config: Optional[ExecConfig] = None, validate: bool = True):
+    def __init__(self,
+                 dm: Union[DistanceMatrix, jax.Array, np.ndarray, None] = None,
+                 config: Optional[ExecConfig] = None, validate: bool = True,
+                 *, features=None, metric=None):
         self.config = config if config is not None else ExecConfig()
+        self.generation = 0
+        self.cache = HoistCache()
+        if features is not None:
+            if dm is not None:
+                raise ValueError("pass a distance matrix OR a feature "
+                                 "table, not both")
+            self._admit_features(features, metric)
+        else:
+            if dm is None:
+                raise ValueError("Workspace needs a distance matrix (or "
+                                 "features= — see Workspace.from_features)")
+            self._admit_dm(dm, validate)
+
+    @classmethod
+    def from_features(cls, features, metric=None,
+                      config: Optional[ExecConfig] = None) -> "Workspace":
+        """A session straight from an (n, d) feature table — the fused
+        ``repro.dist`` path.
+
+        The distances are produced tile-by-tile in CONDENSED layout on
+        first use, and the operator means (and the Mantel-side condensed
+        moments) are accumulated during that same sweep — so the
+        matrix-free analyses (``pcoa(method="fsvd")``, ``permanova``,
+        ``permdisp``) run without an n×n square distance matrix ever
+        existing. Hoists that are genuinely square build only their own
+        artifact (``ranks``' rank matrix; ``gram`` for eigh/materialized
+        ordination); the square *distances* materialize lazily — counted
+        under the cache's ``"square"`` key — only when the Mantel
+        family's gathers demand them.
+
+        ``metric`` is a ``repro.dist`` name or ``Metric`` instance
+        (default: ``config.metric``, Bray–Curtis). The table is validated
+        finite on admission (shared ``ensure_finite`` path) and
+        canonicalized to fp32 like a distance matrix would be.
+        """
+        return cls(features=features, metric=metric, config=config)
+
+    # -- admission (shared by __init__ and refresh) -------------------------
+    def _admit_dm(self, dm, validate: bool) -> None:
         if not isinstance(dm, DistanceMatrix):
-            dm = DistanceMatrix(jnp.asarray(dm), validate=validate)
-        elif validate and not dm._validated:
-            # a DistanceMatrix built with validate=False is NOT trusted
-            # just for its wrapper type — the session's validate flag
-            # decides, exactly as for a raw array
-            dm = DistanceMatrix(dm.data, ids=dm.ids, validate=True)
+            arr = jnp.asarray(dm)
+            # finite first: a NaN would otherwise surface as a baffling
+            # "matrix is not symmetric" (NaN != NaN) — or, with
+            # validate=False, propagate silently into eigenvalues
+            ensure_finite(arr)
+            dm = DistanceMatrix(arr, validate=validate)
+        else:
+            ensure_finite(dm.data)
+            if validate and not dm._validated:
+                # a DistanceMatrix built with validate=False is NOT trusted
+                # just for its wrapper type — the session's validate flag
+                # decides, exactly as for a raw array
+                dm = DistanceMatrix(dm.data, ids=dm.ids, validate=True)
         data = dm.data
         if data.dtype != jnp.float32:
             data = data.astype(jnp.float32)
@@ -146,22 +219,119 @@ class Workspace:
             # so downstream copies (e.g. inside pcoa) never revalidate
             self._dm = DistanceMatrix(data, ids=dm.ids,
                                       _skip_validation=True)
+        self._features = None
+        self._metric = None
         self.n = len(self._dm)
+
+    def _admit_features(self, features, metric) -> None:
+        x = jnp.asarray(features)
+        if x.ndim != 2:
+            raise ValueError(f"expected an (n, d) feature table, "
+                             f"got shape {x.shape}")
+        ensure_finite(x, what="feature table")
+        if x.dtype != jnp.float32:
+            x = x.astype(jnp.float32)
+        if self.config.device is not None:
+            x = jax.device_put(x, self.config.device)
+        self._features = x
+        self._metric = get_metric(metric if metric is not None
+                                  else self.config.metric)
+        self._dm = None
+        self.n = int(x.shape[0])
+
+    # -- cache lifecycle ----------------------------------------------------
+    def refresh(self, dm=None, *, features=None, metric=None) -> "Workspace":
+        """Invalidate every cached hoist and bump ``generation``.
+
+        The HoistCache assumes the session matrix never changes under it;
+        when it does — the caller mutated their source buffer, or wants to
+        re-point the session at a new matrix/table — ``refresh`` is the
+        documented way back to a consistent state: all cached artifacts
+        (operator means, gram, ranks, coords, condensed, ...) are dropped
+        with fresh hit/miss counters, and the next analysis re-runs each
+        hoist exactly once. Pass ``dm=`` or ``features=`` to re-admit new
+        data (same validation/canonicalization as construction); with no
+        arguments the current matrix/table is kept and only the caches
+        drop. Returns ``self`` for chaining.
+        """
+        if dm is not None and features is not None:
+            raise ValueError("pass a distance matrix OR a feature table, "
+                             "not both")
+        self.generation += 1
         self.cache = HoistCache()
+        if dm is not None:
+            self._admit_dm(dm, validate=True)
+        elif features is not None:
+            self._admit_features(features,
+                                 metric if metric is not None
+                                 else self._metric)
+        elif self._features is not None:
+            # feature-backed: the lazily-materialized square (if any) was
+            # derived from the dropped production — it goes too
+            self._dm = None
+        return self
 
     # -- canonical views ----------------------------------------------------
     @property
     def dm(self) -> DistanceMatrix:
+        """The session's square DistanceMatrix. For a feature-backed
+        session this MATERIALIZES the n×n square from the condensed
+        production on first access (cache key ``"square"``) — the
+        matrix-free analyses never touch it."""
+        if self._dm is None:
+            square = self.cache.get("square", lambda: condensed_to_square(
+                self.condensed(), self.n))
+            self._dm = DistanceMatrix(square, _skip_validation=True)
         return self._dm
 
     @property
     def data(self) -> jax.Array:
-        return self._dm.data
+        return self.dm.data
 
     # -- shared hoisted artifacts -------------------------------------------
-    def operator(self) -> CenteredGramOperator:
+    def _produce_distances(self) -> None:
+        """Run the tiled ``repro.dist`` production (feature-backed sessions
+        only): ONE sweep over the feature table builds BOTH cache entries —
+        ``"condensed"`` (the pdist-layout distances) and ``"dist_means"``
+        (the operator row/global means + the Mantel moments, accumulated
+        while each tile was resident). The two keys miss together, by
+        construction."""
+        if "condensed" in self.cache and "dist_means" in self.cache:
+            return
+        prod = pairwise_condensed(
+            self._features, self._metric, block=self.config.block,
+            feature_block=self.config.feature_block,
+            impl=self.config.pairwise_impl,
+            interpret=self.config.interpret)
+        self.cache.get("condensed", lambda: prod["condensed"])
+        self.cache.get("dist_means", lambda: {
+            k: prod[k] for k in ("row_means", "global_mean", "mean",
+                                 "norm")})
+
+    def condensed(self) -> jax.Array:
+        """The condensed (scipy ``pdist`` layout) distances. Feature-backed
+        sessions produce them tile-by-tile (never a square); square-backed
+        sessions extract the upper triangle once."""
+        if self._features is not None:
+            self._produce_distances()
+            return self.cache.get("condensed", lambda: None)
+        return self.cache.get("condensed",
+                              lambda: self._dm.condensed_form())
+
+    def operator(self):
         """The matrix-free centered-Gram operator: row/global means of
-        E = −½D∘D hoisted in ONE read of D."""
+        E = −½D∘D hoisted in ONE read of D — or, for a feature-backed
+        session, taken for FREE from the production sweep's fused
+        accumulators and served over the condensed storage."""
+        if self._features is not None:
+            def build():
+                self._produce_distances()
+                means = self.cache.get("dist_means", lambda: None)
+                return CondensedCenteredGramOperator(
+                    self.cache.get("condensed", lambda: None),
+                    means["row_means"], means["global_mean"], self.n,
+                    self.config.block)
+            return self.cache.get("operator", build)
         return self.cache.get("operator", lambda: (
             CenteredGramOperator.from_distance(
                 self.data, block=self.config.block,
@@ -176,14 +346,35 @@ class Workspace:
             self.data, self.config.centering_impl, self.config.mesh))
 
     def ranks(self) -> dict:
-        """ANOSIM's rank transform: the O(m log m) sort, run once."""
+        """ANOSIM's rank transform: the O(m log m) sort, run once.
+        Feature-backed sessions rank the condensed production directly —
+        only the rank matrix itself (which the per-permutation
+        gather-matmul genuinely consumes) is square."""
+        if self._features is not None:
+            return self.cache.get("ranks", lambda: rank_transform_condensed(
+                self.condensed(), self.n))
         return self.cache.get("ranks",
                               lambda: rank_transform(self.data, self.n))
 
     def moments(self) -> dict:
         """Condensed normalization moments (centered norm + the
         centered-normalized vector, O(m)) — the shared currency of the
-        Mantel family's x-side."""
+        Mantel family's x-side. Feature-backed sessions CONSUME the
+        production sweep's fused mean/norm scalars (accumulated while the
+        tiles were resident — no extra reduction passes; the Σd²−m·mean²
+        form differs from ``condensed_moments`` at ~1e-4 relative, which
+        the Mantel statistics absorb: observed and null draws share the
+        scale) and only pay the one O(m) center-and-divide for the hat
+        vector itself."""
+        if self._features is not None:
+            def build():
+                self._produce_distances()
+                means = self.cache.get("dist_means", lambda: None)
+                return {"norm": means["norm"],
+                        "hat": _centered_normalized(
+                            self.cache.get("condensed", lambda: None),
+                            means["mean"], means["norm"])}
+            return self.cache.get("moments", build)
         return self.cache.get("moments",
                               lambda: condensed_moments(self.data, self.n))
 
@@ -201,7 +392,13 @@ class Workspace:
 
         Full ``OrdinationResult`` objects are cached per
         (dimensions, method, key), so ``ws.permdisp`` reuses the exact
-        coordinates a previous ``ws.pcoa`` produced.
+        coordinates a previous ``ws.pcoa`` produced. An ``eigh`` request
+        for k dimensions is additionally served by SLICING any cached
+        higher-k eigh solution (the exact solver computes the full
+        spectrum and keeps the top k, so the slice is bitwise what a
+        direct solve would return) — counted as a hit on the higher-k
+        entry, no re-solve. (fsvd can't be sliced: its sketch width is
+        k-dependent.)
         """
         k = resolve_dimensions(dimensions, self.n)
         key = as_key(key, default=42)
@@ -209,25 +406,55 @@ class Workspace:
         cache_key = ("coords", k, method, fp)
 
         def build():
-            kw = {}
             if method == "eigh" or (method == "fsvd"
                                     and self.config.materialize):
-                kw["gram"] = self.gram()
-            else:
-                # matrix-free paths — including the distributed matvec,
-                # whose exact trace() comes off the same hoisted means
-                kw["operator"] = self.operator()
-            return _pcoa(self._dm, dimensions=k, method=method, key=key,
-                         config=self.config, **kw)
+                return _pcoa(self.dm, dimensions=k, method=method, key=key,
+                             config=self.config, check_finite=False,
+                             gram=self.gram())
+            # matrix-free paths — including the distributed matvec, whose
+            # exact trace() comes off the same hoisted means. A feature-
+            # backed session passes dm=None: fully matrix-free off the
+            # condensed operator (the distributed matvec still needs the
+            # square, so it goes through self.dm).
+            dm = self.dm if self.config.centering_impl == "distributed" \
+                else self._dm
+            return _pcoa(dm, dimensions=k, method=method, key=key,
+                         config=self.config, check_finite=False,
+                         operator=self.operator())
+
+        if method == "eigh" and cache_key not in self.cache:
+            cands = [kk for kk in self.cache.keys()
+                     if isinstance(kk, tuple) and kk[0] == "coords"
+                     and kk[2] == "eigh" and kk[1] >= k]
+            if cands:
+                src = min(cands, key=lambda kk: kk[1])
+                full = self.cache.get(src, lambda: None)  # reuse: a hit
+
+                def build():    # noqa: F811 — slice, don't re-solve
+                    return OrdinationResult(
+                        coordinates=full.coordinates[:, :k],
+                        eigenvalues=full.eigenvalues[:k],
+                        proportion_explained=full.proportion_explained[:k],
+                        method="eigh", key=None)
 
         return self.cache.get(cache_key, build)
 
     def permanova(self, grouping, permutations: int = 999, key=None,
                   batch_size: Optional[int] = None) -> PermutationTestResult:
-        """PERMANOVA off the cached Gower centering (one-sided, greater)."""
+        """PERMANOVA off the cached Gower centering (one-sided, greater).
+
+        A feature-backed session runs the OPERATOR form instead: the
+        per-permutation quadratic forms stream ``op.matvec(Z_p)`` off the
+        condensed storage, so neither the square D nor the square Gower
+        matrix is ever materialized (``config.materialize=True`` restores
+        the materialized-gram baseline)."""
         codes, num_groups = self._codes(grouping)
-        stat = PermanovaStatistic(self.data, codes, self.n, num_groups,
-                                  pre={"g": self.gram()})
+        if self._features is not None and not self.config.materialize:
+            stat = PermanovaOperatorStatistic(self.operator(), codes,
+                                              self.n, num_groups)
+        else:
+            stat = PermanovaStatistic(self.data, codes, self.n, num_groups,
+                                      pre={"g": self.gram()})
         return engine.permutation_test(
             stat, permutations, key, alternative="greater",
             batch_size=self.config.resolve_batch_size(batch_size, 32),
@@ -235,9 +462,14 @@ class Workspace:
 
     def anosim(self, grouping, permutations: int = 999, key=None,
                batch_size: Optional[int] = None) -> PermutationTestResult:
-        """ANOSIM off the cached rank transform (one-sided, greater)."""
+        """ANOSIM off the cached rank transform (one-sided, greater).
+
+        Feature-backed sessions rank the condensed production directly
+        and carry no square D in the statistic (its ``dm`` field is only
+        consumed when no pre-hoisted ranks are supplied)."""
         codes, num_groups = self._codes(grouping)
-        stat = AnosimStatistic(self.data, codes, self.n, num_groups,
+        dm_field = None if self._features is not None else self.data
+        stat = AnosimStatistic(dm_field, codes, self.n, num_groups,
                                pre=self.ranks())
         return engine.permutation_test(
             stat, permutations, key, alternative="greater",
@@ -266,13 +498,16 @@ class Workspace:
                batch_size: Optional[int] = None) -> PermutationTestResult:
         """Mantel test of this matrix (permuted side) against ``other``
         (a Workspace, DistanceMatrix or raw array; held fixed). Both
-        sides' normalization hoists come from their sessions' caches."""
+        sides' normalization hoists come from their sessions' caches; the
+        fixed side contributes ONLY its hat form — the statistic's ``y``
+        field (consumed only when no ``pre`` is supplied) stays None, so
+        a feature-backed ``other`` never materializes its square."""
         other = self._coerce(other)
         if other.n != self.n:
             raise ValueError("x and y must have the same shape")
         pre = {"normxm": self.moments()["norm"],
                "y_full": other.hat_full()}
-        stat = MantelStatistic(self.data, other.data, self.n, pre=pre)
+        stat = MantelStatistic(self.data, None, self.n, pre=pre)
         return engine.permutation_test(
             stat, permutations, key, alternative=alternative,
             batch_size=self.config.resolve_batch_size(batch_size, 8),
@@ -305,12 +540,14 @@ class Workspace:
         pre = {"normxm": self.moments()["norm"], "r_yz": r_yz,
                "y_res_full": (y.hat_full() - r_yz * z_full) / denom,
                "z_full": z_full}
+        # fixed sides ride in via pre only (their y/z fields are consumed
+        # solely by the no-pre hoist) — no square materialization for them
         if self.config.kernel == "pallas":
             stat = PartialMantelPallasStatistic(
-                self.data, y.data, z.data, self.n, pre=pre,
+                self.data, None, None, self.n, pre=pre,
                 block=self.config.block, interpret=self.config.interpret)
         else:
-            stat = PartialMantelStatistic(self.data, y.data, z.data,
+            stat = PartialMantelStatistic(self.data, None, None,
                                           self.n, pre=pre)
         return engine.permutation_test(
             stat, permutations, key, alternative=alternative,

@@ -11,6 +11,7 @@ from repro.core.distance_matrix import (
     random_distance_matrix,
 )
 from repro.core.validation import (
+    ensure_finite,
     is_symmetric_and_hollow,
     is_symmetric_and_hollow_blocked,
     is_symmetric_and_hollow_ref,
@@ -23,23 +24,26 @@ from repro.core.centering import (
 )
 from repro.core.operators import (
     CenteredGramOperator,
+    CondensedCenteredGramOperator,
     centered_gram_matvec_distributed,
 )
-from repro.core.mantel import (condensed_moments, hat_square, mantel,
-                               mantel_distributed, mantel_ref, pearsonr_ref)
+from repro.core.mantel import (condensed_moments, condensed_moments_vec,
+                               hat_square, mantel, mantel_distributed,
+                               mantel_ref, pearsonr_ref)
 from repro.core.pcoa import (OrdinationResult, PCoAResults,
                              materialized_gram, pcoa, resolve_dimensions)
 
 __all__ = [
     "DistanceMatrix", "DistanceMatrixError", "condensed_to_square",
     "random_distance_matrix",
-    "is_symmetric_and_hollow", "is_symmetric_and_hollow_blocked",
-    "is_symmetric_and_hollow_ref",
+    "ensure_finite", "is_symmetric_and_hollow",
+    "is_symmetric_and_hollow_blocked", "is_symmetric_and_hollow_ref",
     "center_distance_matrix", "center_distance_matrix_blocked",
     "center_distance_matrix_distributed", "center_distance_matrix_ref",
-    "CenteredGramOperator", "centered_gram_matvec_distributed",
-    "condensed_moments", "hat_square", "mantel", "mantel_distributed",
-    "mantel_ref", "pearsonr_ref",
+    "CenteredGramOperator", "CondensedCenteredGramOperator",
+    "centered_gram_matvec_distributed",
+    "condensed_moments", "condensed_moments_vec", "hat_square", "mantel",
+    "mantel_distributed", "mantel_ref", "pearsonr_ref",
     "OrdinationResult", "PCoAResults", "materialized_gram", "pcoa",
     "resolve_dimensions",
 ]

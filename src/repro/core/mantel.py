@@ -81,6 +81,16 @@ def mantel_ref(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
 # --------------------------------------------------------------------------
 # Algorithm 5 — hoisted + fused mantel, as an engine Statistic
 # --------------------------------------------------------------------------
+@jax.jit
+def condensed_moments_vec(flat: jax.Array) -> dict:
+    """``condensed_moments`` for distances already in condensed layout —
+    the entry point for feature-backed sessions (``repro.dist`` produces
+    condensed directly, so the square extraction is skipped)."""
+    centered = flat - flat.mean()
+    norm = jnp.linalg.norm(centered)
+    return {"norm": norm, "hat": centered / norm}
+
+
 @partial(jax.jit, static_argnames=("n",))
 def condensed_moments(data: jax.Array, n: int) -> dict:
     """The O(m) permutation-invariant moments of ONE matrix, cacheable per
@@ -91,10 +101,7 @@ def condensed_moments(data: jax.Array, n: int) -> dict:
     ``hat_square`` build, cached under its own key so a matrix used only
     as the permuted x-side never pays for it."""
     iu = np.triu_indices(n, k=1)
-    flat = data[iu]
-    centered = flat - flat.mean()
-    norm = jnp.linalg.norm(centered)
-    return {"norm": norm, "hat": centered / norm}
+    return condensed_moments_vec(data[iu])
 
 
 def hat_square(moments: dict, n: int) -> jax.Array:

@@ -133,6 +133,117 @@ class CenteredGramOperator:
 
 
 # --------------------------------------------------------------------------
+# Condensed-backed operator — the repro.dist fusion target
+# --------------------------------------------------------------------------
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["dc", "row_means", "global_mean"],
+         meta_fields=["n", "block"])
+@dataclasses.dataclass
+class CondensedCenteredGramOperator:
+    """The same centered-Gram operator, backed by the CONDENSED distances.
+
+    ``repro.dist`` produces distances tile-by-tile and accumulates the
+    row/global means of E = −½ D∘D while doing so; this operator is what
+    those artifacts plug into — the m = n(n−1)/2 condensed vector is the
+    **only** large buffer (half a square's bytes, and never an n×n
+    allocation), and each matvec row strip is gathered from it on the fly
+    with closed-form triangle indexing:
+
+        k(i, j) = i(2n − i − 1)/2 + (j − i − 1)   for i < j  (scipy layout)
+
+    The strip gather is O(b·n) int arithmetic + one vectorized gather —
+    the same formulation as ``condensed_to_square`` (XLA:CPU scalarizes
+    the scatter inverse ~70x), but per-strip, so no n×n position map is
+    ever built either. Index arithmetic is int32 — the peak intermediate
+    ``lo·(2n − lo − 1)`` is < n², exact only for n ≤ 46340, and an
+    overflow would CLAMP the wrapped gather indices into silently wrong
+    distances — so construction refuses larger n outright (the x64-off
+    container has no int64 escape hatch; out-of-core production is the
+    ROADMAP path past this bound anyway).
+
+    D is hollow by construction (the diagonal is identically 0), so
+    ``trace`` needs no diagonal term: tr(F) = −n·m̄.
+    """
+
+    dc: jax.Array           # (m,) condensed distances — the ONLY big buffer
+    row_means: jax.Array    # (n,)  row means of E = −½ D∘D
+    global_mean: jax.Array  # ()    global mean of E
+    n: int
+    block: int = 256
+
+    _MAX_N = 46340          # floor(sqrt(2^31)): int32-exact triangle index
+
+    def __post_init__(self):
+        if self.n > self._MAX_N:
+            raise ValueError(
+                f"CondensedCenteredGramOperator supports n <= "
+                f"{self._MAX_N} (int32 triangle indexing would overflow "
+                f"and silently corrupt the gather); got n={self.n}")
+
+    @classmethod
+    def from_production(cls, prod: dict, *,
+                        block: int = 256) -> "CondensedCenteredGramOperator":
+        """Wrap a ``repro.dist.pairwise_condensed`` result — the means were
+        already accumulated during the distance production, so this costs
+        nothing."""
+        return cls(prod["condensed"], prod["row_means"],
+                   prod["global_mean"], prod["n"], block)
+
+    @property
+    def dtype(self):
+        return self.dc.dtype
+
+    def row_panel(self, i0: int, b: int) -> jax.Array:
+        """Rows [i0, i0+b) of D gathered from the condensed vector."""
+        if self.dc.shape[0] == 0:            # n <= 1: no off-diagonal pairs
+            return jnp.zeros((b, self.n), dtype=self.dtype)
+        r = jnp.arange(i0, i0 + b, dtype=jnp.int32)[:, None]
+        c = jnp.arange(self.n, dtype=jnp.int32)[None, :]
+        lo = jnp.minimum(r, c)
+        hi = jnp.maximum(r, c)
+        k = lo * (2 * self.n - lo - 1) // 2 + (hi - lo - 1)
+        on_diag = r == c
+        return jnp.where(on_diag, 0.0, self.dc[jnp.where(on_diag, 0, k)])
+
+    # -- the operator interface (duck-typed with CenteredGramOperator) ------
+    def matvec(self, x: jax.Array) -> jax.Array:
+        """``F @ x`` with each D row strip gathered from condensed storage;
+        peak extra memory is one (block, n) strip, never n²."""
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        colsum = jnp.sum(x, axis=0)                  # 1ᵀX   (k,)
+        corr = self.global_mean * colsum - self.row_means @ x  # m·1ᵀX − rᵀX
+        b = max(min(self.block, self.n), 1)
+        parts = []
+        for i0 in range(0, self.n, b):               # static row strips
+            bi = min(b, self.n - i0)
+            rows = self.row_panel(i0, bi)
+            e_rows = -0.5 * rows * rows              # fused into the dot
+            parts.append(e_rows @ x
+                         - self.row_means[i0:i0 + bi, None] * colsum[None, :]
+                         + corr[None, :])
+        out = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        return out[:, 0] if squeeze else out
+
+    def trace(self) -> jax.Array:
+        """Exact ``tr(F) = Σλ``: the condensed form is hollow by
+        construction, so tr(E) = 0 and tr(F) = −n·m̄."""
+        return -self.n * self.global_mean
+
+    def to_square(self) -> jax.Array:
+        """The full symmetric hollow D — only for callers that explicitly
+        demand a square hoist (gram/ranks); defeats the point otherwise."""
+        from repro.core.distance_matrix import condensed_to_square
+        return condensed_to_square(self.dc, self.n)
+
+    def materialize(self) -> jax.Array:
+        """The full Gower-centered F (the eigh oracle path)."""
+        from repro.core.centering import center_distance_matrix
+        return center_distance_matrix(self.to_square())
+
+
+# --------------------------------------------------------------------------
 # Distributed matvec — the shard_map mesh layout of core.centering
 # --------------------------------------------------------------------------
 def centered_gram_matvec_distributed(d: jax.Array, x: jax.Array, mesh,

@@ -147,13 +147,14 @@ def materialized_gram(dm_data: jax.Array, centering_impl: str = "fused",
     raise ValueError(f"unknown centering_impl {centering_impl!r}")
 
 
-def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
-         key=None, mesh=None,
+def pcoa(dm: Optional[DistanceMatrix], dimensions: int = 10,
+         method: str = "fsvd", key=None, mesh=None,
          centering_impl: str = "fused", materialize: bool = False,
          matvec_impl: str = "xla", block: int = 256,
          config: Optional[ExecConfig] = None,
          operator: Optional[CenteredGramOperator] = None,
-         gram: Optional[jax.Array] = None) -> OrdinationResult:
+         gram: Optional[jax.Array] = None,
+         check_finite: bool = True) -> OrdinationResult:
     """Principal Coordinates Analysis of a distance matrix.
 
     ``method="fsvd"`` (default) runs **matrix-free** against a
@@ -172,12 +173,34 @@ def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
     hoists run once per session, not once per call; ``dimensions`` is
     validated by ``resolve_dimensions`` (<= 0 raises, > n clamps)
     identically on every path.
+
+    ``dm=None`` is the fully matrix-free entry: a prebuilt ``operator``
+    (e.g. the condensed-backed one ``Workspace.from_features`` hoists
+    straight out of the ``repro.dist`` tile sweep) stands in for the
+    square matrix entirely — only legal for the matrix-free fsvd path,
+    since eigh/materialized solves need an actual matrix. Non-finite
+    input is rejected up front (``check_finite=False`` for callers that
+    already validated, e.g. a Workspace session): a NaN in D otherwise
+    propagates silently into the eigenvalues.
     """
+    from repro.core.validation import ensure_finite
     from repro.stats.engine import as_key
     cfg = config if config is not None else ExecConfig(
         mesh=mesh, centering_impl=centering_impl, materialize=materialize,
         matvec_impl=matvec_impl, block=block)
     key = as_key(key, default=42)
+
+    if dm is None:
+        if operator is None:
+            raise ValueError("pcoa needs a DistanceMatrix or a prebuilt "
+                             "operator")
+        if method != "fsvd" or cfg.materialize or \
+                cfg.centering_impl == "distributed":
+            raise ValueError("dm=None (operator-only) is limited to the "
+                             "matrix-free fsvd path; eigh/materialized/"
+                             "distributed solves need the square matrix")
+    elif check_finite:
+        ensure_finite(dm.data)
 
     def _gram(data):
         return gram if gram is not None else \
@@ -195,10 +218,14 @@ def pcoa(dm: DistanceMatrix, dimensions: int = 10, method: str = "fsvd",
         raise ValueError("a prebuilt operator is only consumed by the "
                          "matrix-free fsvd path (pass gram= instead)")
 
-    # scikit-bio's pcoa makes an internal copy of the DistanceMatrix — the
-    # paper's validation-caching means this copy is free of revalidation.
-    dm = dm.copy()
-    n = len(dm)
+    if dm is not None:
+        # scikit-bio's pcoa makes an internal copy of the DistanceMatrix —
+        # the paper's validation-caching means this copy is free of
+        # revalidation.
+        dm = dm.copy()
+        n = len(dm)
+    else:
+        n = operator.n
     k = resolve_dimensions(dimensions, n)
 
     if method == "eigh":

@@ -19,6 +19,29 @@ import jax
 import jax.numpy as jnp
 
 
+@jax.jit
+def _all_finite(arr: jax.Array):
+    # one fused reduction — no boolean intermediate reaches HBM/DRAM
+    return jnp.all(jnp.isfinite(arr))
+
+
+def ensure_finite(arr: jax.Array, what: str = "distance matrix") -> None:
+    """Raise ``ValueError`` if ``arr`` contains NaN/Inf.
+
+    The shared admission check of the analysis entry points (``Workspace``,
+    ``pcoa``, ``Workspace.from_features``): a NaN in D otherwise propagates
+    *silently* — into eigenvalues (LAPACK returns NaN spectra without
+    complaint) and into permutation-test p-values (NaN comparisons are all
+    False, which under-counts exceedances). One fused single-pass
+    reduction, same discipline as the symmetric/hollow check.
+    """
+    if not bool(_all_finite(arr)):
+        raise ValueError(
+            f"{what} contains non-finite values (nan/inf); distances and "
+            f"feature tables must be finite — clean the input (e.g. drop "
+            f"or impute the offending samples) before analysis")
+
+
 def is_symmetric_and_hollow_ref(mat: jax.Array):
     """Algorithm 6 — original scikit-bio implementation (eager, multi-pass)."""
     # Eager ops mirror NumPy's step-at-a-time evaluation: a full boolean

@@ -18,6 +18,9 @@ Kernels (paper hot spots only — DESIGN §3):
 * ``symhollow``    — fused symmetric+hollow validation (paper Algorithm 7).
 * ``mantel_corr``  — batched permuted-Pearson reduction with Y-tile reuse
                      (paper Algorithm 5, TPU-native formulation).
+* ``pairwise``     — tiled pairwise-distance row panel: the ``repro.dist``
+                     metric reduce fused in-register against VMEM-resident
+                     Xᵢ/Xⱼ feature blocks.
 * ``rmsnorm``      — the paper's fusion discipline applied to the LM stack's
                      most common memory-bound op (3 passes → 1).
 """
@@ -26,6 +29,7 @@ from repro.kernels.center_ops import center_distance_matrix_pallas
 from repro.kernels.center_matvec_ops import center_matvec_pallas
 from repro.kernels.symhollow_ops import is_symmetric_and_hollow_pallas
 from repro.kernels.mantel_corr_ops import mantel_corr_pallas
+from repro.kernels.pairwise_ops import pairwise_panel_pallas
 from repro.kernels.rmsnorm_ops import rmsnorm_pallas
 
 __all__ = [
@@ -33,5 +37,6 @@ __all__ = [
     "center_matvec_pallas",
     "is_symmetric_and_hollow_pallas",
     "mantel_corr_pallas",
+    "pairwise_panel_pallas",
     "rmsnorm_pallas",
 ]

@@ -37,7 +37,7 @@ from repro.stats.engine import (
     permutation_test_distributed,
 )
 from repro.stats.anosim import AnosimStatistic, anosim, anosim_ref, \
-    rank_transform
+    rank_transform, rank_transform_condensed
 from repro.stats.partial_mantel import (
     PartialMantelPallasStatistic,
     PartialMantelStatistic,
@@ -45,6 +45,7 @@ from repro.stats.partial_mantel import (
     partial_mantel_ref,
 )
 from repro.stats.permanova import (
+    PermanovaOperatorStatistic,
     PermanovaStatistic,
     permanova,
     permanova_ref,
@@ -55,8 +56,10 @@ __all__ = [
     "PermutationTestResult", "Statistic", "as_key", "permutation_orders",
     "permutation_test", "permutation_test_distributed",
     "AnosimStatistic", "anosim", "anosim_ref", "rank_transform",
+    "rank_transform_condensed",
     "PartialMantelPallasStatistic", "PartialMantelStatistic",
     "partial_mantel", "partial_mantel_ref",
-    "PermanovaStatistic", "permanova", "permanova_ref",
+    "PermanovaOperatorStatistic", "PermanovaStatistic", "permanova",
+    "permanova_ref",
     "PermdispStatistic", "permdisp", "permdisp_ref",
 ]

@@ -46,6 +46,19 @@ def _rank_average(v: jax.Array) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("n",))
+def rank_transform_condensed(flat: jax.Array, n: int) -> dict:
+    """The rank hoist straight from a condensed vector — the entry point
+    for feature-backed sessions (``Workspace.from_features``), whose
+    distances live in ``repro.dist``'s condensed layout: the square
+    distance matrix is never formed; only the rank matrix itself (which
+    ANOSIM's per-permutation gather-matmul genuinely consumes) is
+    square."""
+    ranks = _rank_average(flat)                      # ranked exactly once
+    return {"rank_full": condensed_to_square(ranks, n),
+            "total_sum": jnp.sum(ranks)}
+
+
+@partial(jax.jit, static_argnames=("n",))
 def rank_transform(dm_data: jax.Array, n: int) -> dict:
     """The O(m log m) rank hoist, split out so a Workspace can cache it.
 
@@ -54,9 +67,7 @@ def rank_transform(dm_data: jax.Array, n: int) -> dict:
     consumes. Bitwise-identical whether computed here (once per session)
     or inside ``AnosimStatistic.hoist`` (once per test)."""
     iu = np.triu_indices(n, k=1)
-    ranks = _rank_average(dm_data[iu])               # ranked exactly once
-    return {"rank_full": condensed_to_square(ranks, n),
-            "total_sum": jnp.sum(ranks)}
+    return rank_transform_condensed(dm_data[iu], n)
 
 
 @partial(jax.tree_util.register_dataclass,

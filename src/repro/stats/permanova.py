@@ -72,6 +72,51 @@ class PermanovaStatistic:
         return (ss_among / dof_among) / (ss_within / dof_within)
 
 
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["op", "grouping"],
+         meta_fields=["n", "num_groups"])
+@dataclasses.dataclass
+class PermanovaOperatorStatistic:
+    """Pseudo-F with the Gower centering held as an OPERATOR, not a matrix.
+
+    The quadratic forms PERMANOVA consumes — ``diag(Z_pᵀ G Z_p)`` — only
+    ever touch G through products with the skinny (n, k) permuted design,
+    and ``SS_total = tr(G)`` comes exactly from the operator's hoisted
+    means (McArdle & Anderson 2001). So when the distances were produced
+    by ``repro.dist`` (``Workspace.from_features``), the per-permutation
+    pass is ``op.matvec(Z_p)`` against the **condensed** storage: the
+    square n×n Gower matrix — the one hoist the materialized statistic
+    cannot avoid — never exists, and each permutation batch streams
+    (block, n) strips instead (roughly half the bytes of a square-G
+    read, with the E-formation fused into the strip sweep).
+
+    ``op`` is any centered-Gram operator pytree
+    (``core.operators.CenteredGramOperator`` or the condensed-backed
+    ``CondensedCenteredGramOperator``); its tiling metadata is static, so
+    the jitted engine caches per (operator type, shape).
+    """
+
+    op: object             # centered-Gram operator pytree (G as an operator)
+    grouping: jax.Array    # (n,) int group codes in [0, num_groups)
+    n: int
+    num_groups: int
+
+    def hoist(self):
+        z = jax.nn.one_hot(self.grouping, self.num_groups,
+                           dtype=self.op.dtype)
+        sizes = jnp.sum(z, axis=0)
+        return {"z": z, "sizes": sizes, "ss_total": self.op.trace()}
+
+    def per_perm(self, inv, order):
+        z = inv["z"][order]                          # O(n·k) label gather
+        s = jnp.sum(z * self.op.matvec(z), axis=0)   # (k,) quadratic forms
+        ss_among = jnp.sum(s / inv["sizes"])
+        ss_within = inv["ss_total"] - ss_among
+        dof_among = self.num_groups - 1
+        dof_within = self.n - self.num_groups
+        return (ss_among / dof_among) / (ss_within / dof_within)
+
+
 def permanova(dm: DistanceMatrix, grouping, permutations: int = 999,
               key=None, batch_size: int = 32) -> PermutationTestResult:
     """Hoisted+fused PERMANOVA; one-sided (greater), like scikit-bio.
