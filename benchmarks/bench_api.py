@@ -30,16 +30,18 @@ _DIMS = 10
 
 # Analytic n²-pass cost of building each HoistCache artifact (reads +
 # writes of n²-sized buffers, fp32). These mirror the implementations:
-#   operator — row/global means of E in ONE read of D (the paper's hoist)
-#   gram     — fused centering: 2 reads + 2 writes (paper Algorithm 2)
-#   ranks    — condensed read + O(m log m) sort traffic + square rank
-#              matrix write ≈ 2 full passes
-#   moments  — condensed read + centered-norm reduce ≈ ½ pass (O(m))
-#   hat_full — square symmetric hat-matrix gather + write ≈ 1 pass
-#   coords   — the fsvd solve: 4 operator matvecs (range find + 2 power
+#   operator  — row/global means of E in ONE read of D (the paper's hoist)
+#   gram      — fused centering: 2 reads + 2 writes (paper Algorithm 2)
+#   condensed — triangle extraction from the square: m-element gather +
+#               m-element write ≈ 1 full pass (m = n(n−1)/2 ≈ ½n²)
+#   ranks     — O(m log m) sort of the cached condensed + condensed rank
+#               write ≈ 1 pass (square-free since the permute_reduce loop:
+#               no rank matrix is ever materialized)
+#   moments   — condensed read + centered-norm reduce ≈ ½ pass (O(m))
+#   coords    — the fsvd solve: 4 operator matvecs (range find + 2 power
 #              iterations + projection), each one read of D
-_PASSES = {"operator": 1.0, "gram": 4.0, "ranks": 2.0, "moments": 0.5,
-           "hat_full": 1.0, "coords": 4.0}
+_PASSES = {"operator": 1.0, "gram": 4.0, "condensed": 1.0, "ranks": 1.0,
+           "moments": 0.5, "coords": 4.0}
 
 
 def _artifact(key):

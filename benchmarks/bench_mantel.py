@@ -1,4 +1,5 @@
-"""Paper Table 2: mantel runtimes.
+"""Paper Table 2: mantel runtimes — plus ``--suite mantel``, the analytic
+per-permutation traffic accounting of the condensed batch-fused loop.
 
 Baseline = the paper's literal original (Algorithm 3): per permutation,
 NumPy row+column fancy-indexing to materialize the permuted matrix,
@@ -7,7 +8,26 @@ condense to the upper triangle, and call black-box
 Optimized = Algorithm 5: hoisted invariants + one fused gather-multiply-
 reduce per permutation. K=199 (paper: 999 — the ratio is K-independent,
 both paths are linear in K).
+
+``run_suite`` (→ ``BENCH_mantel.json``) records the tracked quantity per
+the container-noise rule: **analytic fp32 traffic per permutation**, not
+wall-clock (±40% noisy). Three audited models of the Mantel hot loop:
+
+* ``original`` (Algorithm 3, eager): the two materializing square
+  gathers (4 n²-passes), the triangle condense (2m), and black-box
+  pearsonr's multi-pass mean/center/norm/dot over both m-vectors (~8m)
+  ⇒ 4n² + 10m ≈ 9n² floats.
+* ``square_gather`` (the PR-4 engine loop): per permutation,
+  ``x[order][:, order]`` lowers to two materialized n² gathers (read +
+  write each) and the fused reduce reads the gathered Xp plus the square
+  hoisted Ŷ ⇒ 6n² floats.
+* ``condensed_fused`` (this PR): one closed-form condensed gather (m)
+  plus the per-permutation share of the tile streams — ŷ_c, and the
+  ii/jj triangle map, each fetched once per B-permutation tile (3m/B) —
+  plus the (n,) order row ⇒ m(1 + 3/B) + n ≈ n²/2 floats at B=32.
 """
+
+import json
 
 import numpy as np
 from scipy.stats import pearsonr
@@ -35,6 +55,85 @@ def mantel_numpy_original(x: np.ndarray, y: np.ndarray, permutations: int,
         permuted_stats[p] = pearsonr(x_perm_flat, y_flat).statistic
     count = (np.abs(permuted_stats) >= abs(orig_stat)).sum()
     return orig_stat, (count + 1) / (permutations + 1)
+
+
+def perm_traffic_floats(n: int, batch: int) -> dict:
+    """Audited analytic fp32 floats moved PER PERMUTATION by each
+    formulation of the Mantel inner loop (see module docstring)."""
+    m = n * (n - 1) // 2
+    return {
+        "original": 4 * n * n + 10 * m,
+        "square_gather": 6 * n * n,
+        "condensed_fused": m * (1.0 + 3.0 / batch) + n,
+    }
+
+
+def run_suite(sizes=(2048, 4096), permutations=999, batch=32,
+              out_json="BENCH_mantel.json"):
+    """--suite mantel: the tracked per-permutation traffic artifact.
+
+    Acceptance gate: ``condensed_fused`` must move ≥ 8x fewer analytic
+    bytes per permutation than ``square_gather`` at n=2048, K=999. Wall
+    time of the live fused path is recorded but informational only."""
+    print(f"\n# --suite mantel — analytic per-permutation traffic, "
+          f"K={permutations}, batch B={batch} "
+          f"(square-gather loop vs condensed batch-fused)")
+    results = {}
+    for n in sizes:
+        floats = perm_traffic_floats(n, batch)
+        bytes_per_perm = {k: 4.0 * v for k, v in floats.items()}
+        ratio_sq = bytes_per_perm["square_gather"] / \
+            bytes_per_perm["condensed_fused"]
+        ratio_orig = bytes_per_perm["original"] / \
+            bytes_per_perm["condensed_fused"]
+
+        x = random_distance_matrix(jax.random.PRNGKey(n), n)
+        y = random_distance_matrix(jax.random.PRNGKey(n + 1), n)
+        key = jax.random.PRNGKey(7)
+        t_fused = time_fn(mantel, x, y, permutations, key, repeats=1)
+
+        # the gate is enforced, not just printed: a traffic-model or
+        # kernel regression must fail the suite (CI runs this via --smoke)
+        assert ratio_sq >= 8.0, (
+            f"condensed_fused moves only {ratio_sq:.2f}x fewer bytes than "
+            f"square_gather at n={n} (acceptance floor: 8x)")
+
+        results[n] = {
+            "bytes_per_perm": bytes_per_perm,
+            "total_bytes": {k: v * permutations
+                            for k, v in bytes_per_perm.items()},
+            "ratio_vs_square_gather": ratio_sq,
+            "ratio_vs_original": ratio_orig,
+            "wall_fused_seconds": t_fused,       # informational (±40%)
+        }
+        print(f"mantel-traffic  n={n:<6d} square-gather "
+              f"{bytes_per_perm['square_gather'] / 1e6:8.2f} MB/perm  "
+              f"condensed-fused {bytes_per_perm['condensed_fused'] / 1e6:6.2f}"
+              f" MB/perm  -> {ratio_sq:5.2f}x less "
+              f"({ratio_orig:5.2f}x vs the eager original); "
+              f"fused wall {t_fused:.2f}s (informational)")
+
+    if out_json:
+        artifact = {
+            "suite": "mantel",
+            "permutations": permutations,
+            "batch": batch,
+            "traffic_models": {
+                "original": "4n² square gathers + 2m condense + 8m "
+                            "multi-pass pearsonr",
+                "square_gather": "2 materialized n² gathers (r+w) + "
+                                 "fused reduce reading Xp and square Y",
+                "condensed_fused": "m xc gather + (ynorm,ii,jj) streamed "
+                                   "once per B-tile (3m/B) + n order row",
+            },
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "results": {str(n): r for n, r in results.items()},
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results
 
 
 def run(sizes=(512, 1024, 2048), permutations=199):

@@ -23,8 +23,12 @@ Suites:
     production (Workspace.from_features, square-free) vs the
     materialize-then-analyze baseline at n ∈ {2048, 4096}; writes
     BENCH_dist.json with the analytic n×n bytes avoided.
+  mantel — the condensed batch-fused permutation loop: analytic
+    per-permutation bytes moved (square-gather loop vs condensed
+    batch-fused, at n ∈ {2048, 4096}, K=999); writes BENCH_mantel.json.
+    Acceptance gate: ≥ 8x less traffic than the square-gather loop.
 
-``--smoke`` runs the dist + api suites at tiny sizes with NO artifact
+``--smoke`` runs the dist + api + mantel suites at tiny sizes with NO artifact
 written — the CI guard that the benchmark entry points can't silently
 rot (exercises the same code paths; the tracked BENCH_*.json files are
 only ever written by full-size runs).
@@ -46,11 +50,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: dist+api at tiny sizes, no artifacts")
     ap.add_argument("--suite", default="paper",
-                    choices=("paper", "stats", "pcoa", "api", "dist"),
+                    choices=("paper", "stats", "pcoa", "api", "dist",
+                             "mantel"),
                     help="paper tables (default), the repro.stats sweep, "
                          "the matrix-free ordination sweep, the hoist-once "
-                         "Workspace session accounting, or the fused "
-                         "feature-table distance production")
+                         "Workspace session accounting, the fused "
+                         "feature-table distance production, or the "
+                         "condensed Mantel permutation-traffic accounting")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -63,8 +69,26 @@ def main() -> None:
         bench_dist.run(sizes=(128, 256), d=32, permutations=49,
                        out_json=None)
         bench_api.run(sizes=(128,), permutations=49, out_json=None)
-        print("\n# smoke OK — dist + api suites ran end-to-end "
+        bench_mantel.run_suite(sizes=(64,), permutations=19, batch=8,
+                               out_json=None)
+        print("\n# smoke OK — dist + api + mantel suites ran end-to-end "
               "(no artifacts written)")
+        return
+
+    if args.suite == "mantel":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size trajectory file
+            s = bench_mantel.run_suite(sizes=(256, 512), permutations=99,
+                                       out_json="BENCH_mantel_fast.json")
+        else:
+            s = bench_mantel.run_suite()
+        print("\n# summary — per-permutation traffic, square-gather / "
+              "condensed batch-fused (analytic)")
+        for n, r in s.items():
+            print(f"mantel-traffic  n={n:<6d} "
+                  f"{r['ratio_vs_square_gather']:6.2f}x less traffic "
+                  f"({r['ratio_vs_original']:.2f}x vs eager original)")
         return
 
     if args.suite == "dist":

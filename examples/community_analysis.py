@@ -18,13 +18,15 @@ Everything runs through ``repro.api.Workspace`` — and since the
 ``repro.dist`` subsystem, the session starts one step earlier than a
 distance matrix: ``Workspace.from_features`` turns the (n, d) sample
 table into CONDENSED distances tile-by-tile, accumulating the operator
-means during the same sweep, so the first four analyses complete without
-an n×n square distance matrix ever existing (ANOSIM's rank matrix is the
-one square hoist built — it is what the per-permutation gather-matmul
-consumes; watch the printed cache keys: the ``"square"`` distance
-artifact appears only when the Mantel family's gathers demand it). The shared O(n²) hoists are computed on first use and reused
-by every later test; one ``ExecConfig`` carries every execution knob;
-every result records its RNG key.
+means during the same sweep — and since the condensed batch-fused
+permutation loop (``kernels.permute_reduce``), ALL SEVEN analyses below
+complete without an n×n matrix of any kind ever existing: the Mantel
+family and ANOSIM gather condensed storage by closed-form triangle
+indexing (~11x less per-permutation traffic than the old square-gather
+loop — the audited analytic accounting is ``BENCH_mantel.json``, via
+``benchmarks/run.py --suite mantel``). The shared hoists are computed on
+first use and reused by every later test; one ``ExecConfig`` carries
+every execution knob; every result records its RNG key.
 
     PYTHONPATH=src python examples/community_analysis.py [--n 2048]
 
@@ -113,15 +115,15 @@ def main(n: int = 2048, permutations: int = 999):
           f"({time.perf_counter() - t0:.2f}s)")
 
     assert "square" not in ws.cache
-    print(f"    -- four analyses done, no n×n square DISTANCE matrix ever "
-          f"existed (ANOSIM's rank matrix is the one square hoist; cached: "
+    print(f"    -- four analyses done, no n×n matrix of any kind ever "
+          f"existed (even ANOSIM's ranks stayed condensed; cached: "
           f"{sorted(k if isinstance(k, str) else k[0] for k in ws.cache.keys())})")
 
     t0 = time.perf_counter()
     r = ws.mantel(ws_b, permutations, test_key)
     print(f"[4] Mantel A~B     r={r.statistic:8.3f}  p={r.p_value:.4f}  "
-          f"({time.perf_counter() - t0:.2f}s) — gathers demanded the "
-          f"square: {'square' in ws.cache}")
+          f"({time.perf_counter() - t0:.2f}s) — condensed batch loop, "
+          f"square built: {'square' in ws.cache}")
 
     t0 = time.perf_counter()
     r = ws.mantel(ws_env, permutations, test_key)
@@ -133,6 +135,10 @@ def main(n: int = 2048, permutations: int = 999):
     print(f"[6] partial A~B|env r={r.statistic:7.3f}  p={r.p_value:.4f}  "
           f"({time.perf_counter() - t0:.2f}s) — agreement survives the "
           f"control")
+
+    # the whole seven-analysis study ran square-free, in every session
+    for w in (ws, ws_b, ws_env):
+        assert "square" not in w.cache and w._dm is None
 
     families = {k if isinstance(k, str) else k[0] for k in ws.cache.misses}
     builds = {a: ws.cache.build_count(a) for a in sorted(families)}

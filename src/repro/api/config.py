@@ -67,14 +67,20 @@ class ExecConfig:
         Row/column tile size for the operator matvec and the Pallas kernels
         (lane-snapped per backend by ``kernels.center_matvec_ops.pick_block``).
     batch_size:
-        Permutations evaluated per ``lax.map`` step in the stats engine.
-        ``None`` (default) keeps each test's tuned default (8 for the
-        mantel family, whose per-perm operand is an n x n gather; 32 for the
-        grouping tests, whose operand is only the (n, k) design).
+        Permutations evaluated per engine tile — for the batch-fused
+        statistics (Mantel family, ANOSIM) this is exactly the B grid
+        dimension of ``kernels.permute_reduce``: each hoisted condensed
+        invariant streams ONCE per tile and is reused by all B
+        permutations, so bigger batches mean less traffic per
+        permutation (peak memory is one (B, chunk) gather tile). ``None``
+        (default) keeps each test's tuned default (32 everywhere since
+        the condensed loop; the engine pads partial tiles so any K
+        compiles exactly one program).
     kernel:
-        Reduction backend for the (partial) Mantel inner products —
-        ``"xla"`` (default) or ``"pallas"`` (``kernels.mantel_corr`` with
-        Y-tile reuse across the permutation batch).
+        Backend for the batched condensed permutation reductions of the
+        Mantel family and ANOSIM — ``"xla"`` (default; the ``lax.scan``
+        twin of the kernel) or ``"pallas"`` (``kernels.permute_reduce``
+        with explicit VMEM chunk streaming).
     mesh:
         Optional ``jax.sharding.Mesh`` for the distributed paths
         (``centering_impl="distributed"``, distributed matvec/engine).

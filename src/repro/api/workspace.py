@@ -16,9 +16,9 @@ re-normalized both matrices.
   paper's §4.3 validation caching, extended to every derived artifact;
 * the shared hoists live behind a lazy ``HoistCache`` keyed by artifact —
   row/global means of E = −½D∘D (``operator``), the materialized Gower
-  matrix (``gram``), the rank transform (``ranks``), condensed
-  normalization moments (``moments``) and their square hat form
-  (``hat_full``), and full PCoA solutions (``coords``) — each computed on
+  matrix (``gram``), the condensed distances (``condensed``), the
+  condensed rank transform (``ranks``), condensed normalization moments
+  (``moments``), and full PCoA solutions (``coords``) — each computed on
   first use and reused by every later analysis in the session;
 * every analysis method threads the session's single ``ExecConfig``
   through ``core.pcoa``, ``stats.engine`` and the kernel dispatchers, and
@@ -33,12 +33,14 @@ changes is how often D is read.
 ``Workspace.from_features`` extends the session one step upstream: the
 distance matrix itself is produced by the tiled ``repro.dist`` driver in
 CONDENSED layout, with the operator means and Mantel moments accumulated
-during the same sweep — so a feature-table → PCoA → PERMANOVA session
-never materializes an n×n square distance matrix (cache keys
-``"condensed"`` / ``"dist_means"``; hoists that are genuinely square —
-``gram``, ``ranks``' rank matrix — build only their own artifact, and
-the square *distances* appear only when the Mantel gathers or a
-materialized path demand them, under the ``"square"`` key). ``refresh()``
+during the same sweep — and since the Mantel family and ANOSIM now run
+their permutation loops over condensed storage too
+(``kernels.permute_reduce`` closed-form triangle gathers), a
+feature-backed session completes the ENTIRE analysis battery — PCoA,
+PERMANOVA, PERMDISP, ANOSIM, Mantel, partial Mantel — with no n×n
+matrix of any kind ever allocated. The only remaining square builds are
+explicit opt-ins: ``gram`` for eigh/materialized ordination, and the
+``"square"`` key when the caller demands ``ws.dm`` itself. ``refresh()``
 invalidates the whole cache (generation-counted) when the underlying
 data changes.
 """
@@ -55,8 +57,7 @@ import numpy as np
 from repro.api.config import ExecConfig
 from repro.api.results import OrdinationResult
 from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
-from repro.core.mantel import (MantelStatistic, condensed_moments,
-                               hat_square)
+from repro.core.mantel import MantelStatistic, condensed_moments_vec
 from repro.core.operators import (CenteredGramOperator,
                                   CondensedCenteredGramOperator)
 from repro.core.pcoa import pcoa as _pcoa
@@ -64,8 +65,7 @@ from repro.core.pcoa import resolve_dimensions
 from repro.core.validation import ensure_finite
 from repro.dist import get_metric, pairwise_condensed
 from repro.stats import engine
-from repro.stats.anosim import (AnosimStatistic, rank_transform,
-                                rank_transform_condensed)
+from repro.stats.anosim import AnosimStatistic, rank_transform_condensed
 from repro.stats.engine import PermutationTestResult, as_key
 from repro.stats.partial_mantel import (PartialMantelPallasStatistic,
                                         PartialMantelStatistic)
@@ -79,8 +79,8 @@ class HoistCache:
     with per-key hit/miss counters so "the O(n²) hoist ran exactly once"
     is a testable property, not a hope.
 
-    Keys are either artifact names ("operator", "gram", "ranks",
-    "moments", "hat_full") or tuples whose first element is the artifact
+    Keys are either artifact names ("operator", "gram", "condensed",
+    "ranks", "moments") or tuples whose first element is the artifact
     name (("coords", k, method, key-fingerprint)). ``misses[key]`` counts
     builds, ``hits[key]`` counts reuses.
     """
@@ -173,14 +173,14 @@ class Workspace:
 
         The distances are produced tile-by-tile in CONDENSED layout on
         first use, and the operator means (and the Mantel-side condensed
-        moments) are accumulated during that same sweep — so the
-        matrix-free analyses (``pcoa(method="fsvd")``, ``permanova``,
-        ``permdisp``) run without an n×n square distance matrix ever
-        existing. Hoists that are genuinely square build only their own
-        artifact (``ranks``' rank matrix; ``gram`` for eigh/materialized
-        ordination); the square *distances* materialize lazily — counted
-        under the cache's ``"square"`` key — only when the Mantel
-        family's gathers demand them.
+        moments) are accumulated during that same sweep — so the whole
+        analysis battery (``pcoa(method="fsvd")``, ``permanova``,
+        ``permdisp``, ``anosim``, ``mantel``, ``partial_mantel``) runs
+        without an n×n matrix of any kind ever existing: the permutation
+        loops gather condensed storage by closed-form triangle indexing.
+        The only square builds left are explicit opt-ins (``gram`` for
+        eigh/materialized ordination; the lazily-counted ``"square"``
+        key when ``ws.dm`` itself is demanded).
 
         ``metric`` is a ``repro.dist`` name or ``Metric`` instance
         (default: ``config.metric``, Bray–Curtis). The table is validated
@@ -276,8 +276,10 @@ class Workspace:
     def dm(self) -> DistanceMatrix:
         """The session's square DistanceMatrix. For a feature-backed
         session this MATERIALIZES the n×n square from the condensed
-        production on first access (cache key ``"square"``) — the
-        matrix-free analyses never touch it."""
+        production on first access (cache key ``"square"``) — no
+        analysis method demands it anymore; it exists for callers who
+        want the matrix itself (export, plotting, the distributed
+        column-sharded paths)."""
         if self._dm is None:
             square = self.cache.get("square", lambda: condensed_to_square(
                 self.condensed(), self.n))
@@ -346,24 +348,26 @@ class Workspace:
             self.data, self.config.centering_impl, self.config.mesh))
 
     def ranks(self) -> dict:
-        """ANOSIM's rank transform: the O(m log m) sort, run once.
-        Feature-backed sessions rank the condensed production directly —
-        only the rank matrix itself (which the per-permutation
-        gather-matmul genuinely consumes) is square."""
-        if self._features is not None:
-            return self.cache.get("ranks", lambda: rank_transform_condensed(
-                self.condensed(), self.n))
-        return self.cache.get("ranks",
-                              lambda: rank_transform(self.data, self.n))
+        """ANOSIM's rank transform: the O(m log m) sort, run once — and
+        kept CONDENSED: the batched permutation loop gathers the
+        condensed within-indicator, so no square rank matrix exists
+        anywhere. Both backings rank the shared ``"condensed"`` artifact
+        (for a square-backed session that is one cached triangle
+        extraction, also reused by ``moments``)."""
+        return self.cache.get("ranks", lambda: rank_transform_condensed(
+            self.condensed()))
 
     def moments(self) -> dict:
         """Condensed normalization moments (centered norm + the
-        centered-normalized vector, O(m)) — the shared currency of the
-        Mantel family's x-side. Feature-backed sessions CONSUME the
-        production sweep's fused mean/norm scalars (accumulated while the
-        tiles were resident — no extra reduction passes; the Σd²−m·mean²
-        form differs from ``condensed_moments`` at ~1e-4 relative, which
-        the Mantel statistics absorb: observed and null draws share the
+        centered-normalized vector, O(m)) — the shared currency of BOTH
+        Mantel-family sides: the permuted side consumes ``norm``, a fixed
+        side contributes its ``hat`` vector directly (condensed — since
+        the batched loop gathers condensed storage, no square hat form
+        exists anymore). Feature-backed sessions CONSUME the production
+        sweep's fused mean/norm scalars (accumulated while the tiles were
+        resident — no extra reduction passes; the Σd²−m·mean² form
+        differs from ``condensed_moments`` at ~1e-4 relative, which the
+        Mantel statistics absorb: observed and null draws share the
         scale) and only pay the one O(m) center-and-divide for the hat
         vector itself."""
         if self._features is not None:
@@ -375,15 +379,8 @@ class Workspace:
                             self.cache.get("condensed", lambda: None),
                             means["mean"], means["norm"])}
             return self.cache.get("moments", build)
-        return self.cache.get("moments",
-                              lambda: condensed_moments(self.data, self.n))
-
-    def hat_full(self) -> jax.Array:
-        """Square symmetric centered-normalized form (diag 0) — the
-        Mantel family's y-side hoist, O(n²), built only when this matrix
-        is actually used as a fixed side."""
-        return self.cache.get("hat_full",
-                              lambda: hat_square(self.moments(), self.n))
+        return self.cache.get("moments", lambda: condensed_moments_vec(
+            self.condensed()))
 
     # -- analyses -----------------------------------------------------------
     def pcoa(self, dimensions: int = 10, method: str = "fsvd",
@@ -464,13 +461,16 @@ class Workspace:
                batch_size: Optional[int] = None) -> PermutationTestResult:
         """ANOSIM off the cached rank transform (one-sided, greater).
 
-        Feature-backed sessions rank the condensed production directly
-        and carry no square D in the statistic (its ``dm`` field is only
-        consumed when no pre-hoisted ranks are supplied)."""
+        The ranks stay condensed end to end: the batched loop gathers
+        the condensed within-indicator by closed-form triangle indexing,
+        so neither backing ever materializes a square rank matrix (the
+        statistic's ``dm`` field is only consumed when no pre-hoisted
+        ranks are supplied — it rides in as None here)."""
         codes, num_groups = self._codes(grouping)
-        dm_field = None if self._features is not None else self.data
-        stat = AnosimStatistic(dm_field, codes, self.n, num_groups,
-                               pre=self.ranks())
+        stat = AnosimStatistic(None, codes, self.n, num_groups,
+                               pre=self.ranks(),
+                               kernel=self.config.kernel,
+                               interpret=self.config.interpret)
         return engine.permutation_test(
             stat, permutations, key, alternative="greater",
             batch_size=self.config.resolve_batch_size(batch_size, 32),
@@ -497,20 +497,24 @@ class Workspace:
                alternative: str = "two-sided",
                batch_size: Optional[int] = None) -> PermutationTestResult:
         """Mantel test of this matrix (permuted side) against ``other``
-        (a Workspace, DistanceMatrix or raw array; held fixed). Both
-        sides' normalization hoists come from their sessions' caches; the
-        fixed side contributes ONLY its hat form — the statistic's ``y``
-        field (consumed only when no ``pre`` is supplied) stays None, so
-        a feature-backed ``other`` never materializes its square."""
+        (a Workspace, DistanceMatrix or raw array; held fixed). Fully
+        square-free: the permuted side rides in as the shared condensed
+        artifact (the batched loop's closed-form triangle gathers replace
+        the n×n ``x[order][:, order]`` buffer), the fixed side
+        contributes only its CONDENSED hat vector — neither session ever
+        demands the lazy ``"square"`` key, so feature-backed Workspaces
+        run the whole Mantel family with no n×n distance matrix."""
         other = self._coerce(other)
         if other.n != self.n:
             raise ValueError("x and y must have the same shape")
         pre = {"normxm": self.moments()["norm"],
-               "y_full": other.hat_full()}
-        stat = MantelStatistic(self.data, None, self.n, pre=pre)
+               "ynorm": other.moments()["hat"]}
+        stat = MantelStatistic(self.condensed(), None, self.n, pre=pre,
+                               kernel=self.config.kernel,
+                               interpret=self.config.interpret)
         return engine.permutation_test(
             stat, permutations, key, alternative=alternative,
-            batch_size=self.config.resolve_batch_size(batch_size, 8),
+            batch_size=self.config.resolve_batch_size(batch_size, 32),
             config=self.config, method="mantel")
 
     def partial_mantel(self, other, control, permutations: int = 999,
@@ -518,8 +522,10 @@ class Workspace:
                        batch_size: Optional[int] = None
                        ) -> PermutationTestResult:
         """Partial Mantel of this matrix against ``other``, controlling
-        for ``control``; ŷ is residualized from cached moments. Routes
-        through the Pallas reduction when ``config.kernel == "pallas"``."""
+        for ``control``; ŷ is residualized from cached moments — all
+        three operands stay condensed (square-free like ``mantel``).
+        Routes through the Pallas ``permute_reduce`` backend when
+        ``config.kernel == "pallas"``."""
         y, z = self._coerce(other), self._coerce(control)
         if not (self.n == y.n == z.n):
             raise ValueError("x, y and z must have the same shape")
@@ -536,22 +542,19 @@ class Workspace:
                 f"partial correlation is undefined — use the plain Mantel "
                 f"test")
         denom = jnp.sqrt(1.0 - r_yz * r_yz)
-        z_full = z.hat_full()
         pre = {"normxm": self.moments()["norm"], "r_yz": r_yz,
-               "y_res_full": (y.hat_full() - r_yz * z_full) / denom,
-               "z_full": z_full}
+               "y_res": (ym["hat"] - r_yz * zm["hat"]) / denom,
+               "z": zm["hat"]}
         # fixed sides ride in via pre only (their y/z fields are consumed
-        # solely by the no-pre hoist) — no square materialization for them
-        if self.config.kernel == "pallas":
-            stat = PartialMantelPallasStatistic(
-                self.data, None, None, self.n, pre=pre,
-                block=self.config.block, interpret=self.config.interpret)
-        else:
-            stat = PartialMantelStatistic(self.data, None, None,
-                                          self.n, pre=pre)
+        # solely by the no-pre hoist) — nothing square for any operand
+        cls = (PartialMantelPallasStatistic
+               if self.config.kernel == "pallas" else PartialMantelStatistic)
+        stat = cls(self.condensed(), None, None, self.n, pre=pre,
+                   kernel=self.config.kernel,
+                   interpret=self.config.interpret)
         return engine.permutation_test(
             stat, permutations, key, alternative=alternative,
-            batch_size=self.config.resolve_batch_size(batch_size, 8),
+            batch_size=self.config.resolve_batch_size(batch_size, 32),
             config=self.config, method="partial_mantel")
 
     # -- plumbing -----------------------------------------------------------

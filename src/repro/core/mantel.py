@@ -13,12 +13,18 @@ Monte-Carlo null distribution over K row/column permutations (default 999).
     1. the second argument never changes ⇒ normalize ``y`` once;
     2. mean and norm are permutation-invariant ⇒ compute ``x̄``, ``‖x−x̄‖`` once.
   One further algebraic step (DESIGN §2): ``ŷ`` is centered ⇒ ``Σŷ = 0`` ⇒ the
-  ``−x̄`` term vanishes from the inner product, leaving
-      ``r_p = ⟨x_perm, ŷ⟩ / ‖x−x̄‖ = vdot(x[p][:,p], Ŷ_full) / (2‖x−x̄‖)``
-  where ``Ŷ_full`` is the full symmetric centered-normalized matrix (diag 0).
-  The inner loop is a single fused gather+multiply+reduce — the TPU-native
-  form of the paper's Cython loop (row gathers are contiguous; the VPU does
-  the reduction). Explicit VMEM tiling in ``repro.kernels.mantel_corr``.
+  ``−x̄`` term vanishes from the inner product — and the whole loop is
+  SQUARE-FREE: the condensed form of the permuted matrix is an index
+  transform of the condensed original,
+      ``condensed(X_p)[k] = xc[tri(order[i_k], order[j_k])]``,
+  so      ``r_p = ⟨condensed(X_p), ŷ_c⟩ / ‖x−x̄‖``
+  is one closed-form gather + one fused multiply-reduce over the
+  m = n(n−1)/2 condensed entries — never the n×n gather buffer the PR-4
+  loop materialized. Permutations run in batches of B through
+  ``kernels.permute_reduce``: the hoisted ŷ_c / triangle-map streams are
+  fetched once per tile and reused across all B permutations, leaving
+  ~m(1 + 3/B) floats of traffic per permutation vs the square-gather
+  loop's ~6n² ≈ 12m (the measured accounting lives in BENCH_mantel.json).
 * ``mantel_distributed`` — permutations sharded over ('pod','data'), matrix
   columns over 'model': each device reduces its column block, one psum.
   (The engine's ``permutation_test_distributed`` shards only the permutation
@@ -36,7 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
+from repro.core.distance_matrix import (DistanceMatrix, condensed_index,
+                                        condensed_to_square, triangle_coords)
+from repro.kernels.permute_reduce_ops import permute_reduce
 from repro.stats import engine
 
 
@@ -96,54 +104,90 @@ def condensed_moments(data: jax.Array, n: int) -> dict:
     """The O(m) permutation-invariant moments of ONE matrix, cacheable per
     session: centered-condensed norm (the x-side hoist) and the centered-
     normalized condensed vector. Every Mantel-family hoist is assembled
-    from these, so a Workspace computes them once per matrix — not once
-    per test. The y-side's square symmetric form is the separate (O(n²))
-    ``hat_square`` build, cached under its own key so a matrix used only
-    as the permuted x-side never pays for it."""
+    from these — BOTH sides, since the condensed batch loop: a fixed side
+    contributes its ``hat`` vector directly, so a Workspace computes the
+    moments once per matrix and nothing square is ever built (the square
+    ``hat_square`` form survives only for ``mantel_distributed``'s
+    column-sharded split)."""
     iu = np.triu_indices(n, k=1)
     return condensed_moments_vec(data[iu])
 
 
 def hat_square(moments: dict, n: int) -> jax.Array:
-    """Square symmetric form (diag 0) of the centered-normalized vector —
-    the y-side hoist of every Mantel-family inner product."""
+    """Square symmetric form (diag 0) of the centered-normalized vector.
+    Since the condensed batch loop the host-path statistics never need
+    it; the one remaining consumer is ``mantel_distributed``, whose
+    'model'-axis split shards the square's columns."""
     return condensed_to_square(moments["hat"], n)
 
 
+def _as_condensed(mat: jax.Array, n: int) -> jax.Array:
+    """Condensed view of a square matrix; condensed input passes through.
+    The statistics accept both so legacy square-matrix callers keep
+    working while sessions feed condensed storage directly."""
+    if mat.ndim == 1:
+        return mat
+    return mat[np.triu_indices(n, k=1)]
+
+
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["x", "y", "pre"], meta_fields=["n"])
+         data_fields=["x", "y", "pre"],
+         meta_fields=["n", "kernel", "interpret"])
 @dataclasses.dataclass
 class MantelStatistic:
-    """Pearson r between permuted x and fixed y, hoisting split per §4.2.
+    """Pearson r between permuted x and fixed y, hoisting split per §4.2 —
+    square-free: every hoist and every per-permutation pass works on the
+    m = n(n−1)/2 condensed entries.
 
+    ``x``/``y`` may be square (n, n) matrices or condensed (m,) vectors.
     ``pre`` optionally carries the session-level hoist
-    (``{"normxm": ..., "y_full": ...}`` assembled from two Workspaces'
-    cached ``condensed_moments``) so repeated tests against one matrix
-    skip the per-test normalization passes."""
+    (``{"normxm": ..., "ynorm": ...}`` with ``ynorm`` the CONDENSED
+    centered-normalized y, assembled from two Workspaces' cached
+    ``condensed_moments``) so repeated tests against one matrix skip the
+    per-test normalization passes — and a fixed side never builds any
+    square form at all. ``kernel`` picks the batched reduction backend
+    (``"xla"``: the lax.scan twin; ``"pallas"``: the explicit-VMEM
+    kernel), both routed through ``kernels.permute_reduce``."""
 
-    x: jax.Array           # (n, n) permuted matrix
-    y: jax.Array           # (n, n) held fixed
+    x: jax.Array           # (n, n) square or (m,) condensed, permuted side
+    y: Optional[jax.Array]  # same, held fixed; may be None when pre is given
     n: int
     pre: Optional[dict] = None
+    kernel: str = "xla"
+    interpret: Optional[bool] = None
 
     def hoist(self):
+        # the permuted side's condensed view and the triangle coordinate
+        # map are permutation-invariant too — extracted once, outside the
+        # Monte-Carlo loop
+        inv = {"xc": _as_condensed(self.x, self.n)}
         if self.pre is not None:
-            return dict(self.pre)
-        iu = np.triu_indices(self.n, k=1)
-        x_flat = self.x[iu]
-        xm = x_flat - x_flat.mean()
-        normxm = jnp.linalg.norm(xm)                   # computed exactly once
-        y_flat = self.y[iu]
-        ym = y_flat - y_flat.mean()
-        ynorm = ym / jnp.linalg.norm(ym)               # computed exactly once
-        # full symmetric centered-normalized y (diag 0): Σ_uptri == ½ Σ_full
-        return {"normxm": normxm,
-                "y_full": condensed_to_square(ynorm, self.n)}
+            inv.update(self.pre)
+        else:
+            xm = inv["xc"] - inv["xc"].mean()
+            inv["normxm"] = jnp.linalg.norm(xm)        # computed exactly once
+            y_flat = _as_condensed(self.y, self.n)
+            ym = y_flat - y_flat.mean()
+            inv["ynorm"] = ym / jnp.linalg.norm(ym)    # computed exactly once
+        inv["ii"], inv["jj"] = triangle_coords(self.n)
+        return inv
 
     def per_perm(self, inv, order):
-        # two contiguous row-wise gathers + one fused multiply-reduce
-        xp = self.x[order][:, order]
-        return jnp.vdot(xp, inv["y_full"]) / (2.0 * inv["normxm"])
+        # one closed-form condensed gather + one fused multiply-reduce
+        # (Σ_uptri == ½ Σ_full and Σŷ = 0, so the full-matrix 2/(2‖x−x̄‖)
+        # scaling collapses to 1/‖x−x̄‖ on condensed entries)
+        o = order.astype(jnp.int32)
+        k = condensed_index(o[inv["ii"]], o[inv["jj"]], self.n)
+        return jnp.dot(inv["xc"][k], inv["ynorm"]) / inv["normxm"]
+
+    def per_batch(self, inv, orders):
+        # the engine's primary path: all B reductions of one order tile
+        # through the batched kernel — the ŷ/triangle streams are fetched
+        # once per tile and reused across the whole batch
+        stats = permute_reduce(inv["xc"], inv["ynorm"][None, :], orders,
+                               inv["ii"], inv["jj"], impl=self.kernel,
+                               interpret=self.interpret)
+        return stats[0] / inv["normxm"]
 
 
 def _finish(orig_stat, permuted_stats, permutations, alternative, n):
@@ -155,11 +199,16 @@ def _finish(orig_stat, permuted_stats, permutations, alternative, n):
 def mantel(x: DistanceMatrix, y: DistanceMatrix, permutations: int = 999,
            key=None, alternative: str = "two-sided"):
     """Cache-optimized Mantel test (paper Algorithm 5). Same interface and
-    semantics as ``mantel_ref``; ~100x less memory traffic. Thin wrapper
-    over a one-shot ``api.Workspace`` (which is itself a client of
-    ``repro.stats.engine.permutation_test``) — identical p-values per key;
-    a session testing one matrix against several should hold its own
-    Workspace so the normalization hoists are shared."""
+    semantics as ``mantel_ref``, with the square-free condensed batch
+    loop: ~11.0x less per-permutation traffic than the square-gather
+    engine loop and ~16.4x less than the eager Algorithm-3 original
+    (analytic fp32 bytes at n=2048, B=32, K=999 — the audited accounting
+    is the tracked ``BENCH_mantel.json`` artifact, via
+    ``benchmarks/run.py --suite mantel``).
+    Thin wrapper over a one-shot ``api.Workspace`` (which is itself a
+    client of ``repro.stats.engine.permutation_test``) — identical
+    p-values per key; a session testing one matrix against several should
+    hold its own Workspace so the normalization hoists are shared."""
     from repro.api.workspace import Workspace
     # validate=False: trust the DistanceMatrix as constructed, exactly like
     # the pre-session implementation that read x.data directly
@@ -203,7 +252,11 @@ def mantel_distributed(x: DistanceMatrix, y: DistanceMatrix, mesh,
         return inv, s.per_perm(inv, jnp.arange(s.n))
 
     inv, orig_stat = _hoist_and_observe(stat)
-    normxm, y_full = inv["normxm"], inv["y_full"]
+    normxm = inv["normxm"]
+    # this path shards the MATRIX columns over 'model', so it is the one
+    # remaining consumer of the square hat form — assembled here from the
+    # condensed hoist, not inside the statistic
+    y_full = hat_square({"hat": inv["ynorm"]}, n)
 
     n_perm_devices = int(np.prod([mesh.shape[a] for a in perm_axes]))
     if permutations % n_perm_devices:

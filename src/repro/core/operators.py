@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.distance_matrix import MAX_TRIANGLE_N, condensed_index
+
 try:                                    # jax >= 0.6 exports it at top level
     _shard_map = jax.shard_map
 except AttributeError:                  # this container's 0.4.x lineage
@@ -171,7 +173,10 @@ class CondensedCenteredGramOperator:
     n: int
     block: int = 256
 
-    _MAX_N = 46340          # floor(sqrt(2^31)): int32-exact triangle index
+    # the single shared int32-exact bound (kernels.permute_reduce
+    # enforces the same constant); kept as a class attribute for callers
+    # that introspect it
+    _MAX_N = MAX_TRIANGLE_N
 
     def __post_init__(self):
         if self.n > self._MAX_N:
@@ -199,9 +204,7 @@ class CondensedCenteredGramOperator:
             return jnp.zeros((b, self.n), dtype=self.dtype)
         r = jnp.arange(i0, i0 + b, dtype=jnp.int32)[:, None]
         c = jnp.arange(self.n, dtype=jnp.int32)[None, :]
-        lo = jnp.minimum(r, c)
-        hi = jnp.maximum(r, c)
-        k = lo * (2 * self.n - lo - 1) // 2 + (hi - lo - 1)
+        k = condensed_index(r, c, self.n)
         on_diag = r == c
         return jnp.where(on_diag, 0.0, self.dc[jnp.where(on_diag, 0, k)])
 

@@ -17,7 +17,13 @@ Kernels (paper hot spots only — DESIGN §3):
                      in-register against a skinny (n, k) block.
 * ``symhollow``    — fused symmetric+hollow validation (paper Algorithm 7).
 * ``mantel_corr``  — batched permuted-Pearson reduction with Y-tile reuse
-                     (paper Algorithm 5, TPU-native formulation).
+                     (paper Algorithm 5, TPU-native formulation; square
+                     operands — kept as the materialized baseline).
+* ``permute_reduce`` — the square-free successor: B permuted condensed
+                     multiply-reduces per tile, the invariant streams
+                     through VMEM once per chunk and the permuted gather
+                     is closed-form triangle indexing — the Mantel/ANOSIM
+                     permutation hot loop with no n² buffer anywhere.
 * ``pairwise``     — tiled pairwise-distance row panel: the ``repro.dist``
                      metric reduce fused in-register against VMEM-resident
                      Xᵢ/Xⱼ feature blocks.
@@ -30,6 +36,7 @@ from repro.kernels.center_matvec_ops import center_matvec_pallas
 from repro.kernels.symhollow_ops import is_symmetric_and_hollow_pallas
 from repro.kernels.mantel_corr_ops import mantel_corr_pallas
 from repro.kernels.pairwise_ops import pairwise_panel_pallas
+from repro.kernels.permute_reduce_ops import permute_reduce
 from repro.kernels.rmsnorm_ops import rmsnorm_pallas
 
 __all__ = [
@@ -38,5 +45,6 @@ __all__ = [
     "is_symmetric_and_hollow_pallas",
     "mantel_corr_pallas",
     "pairwise_panel_pallas",
+    "permute_reduce",
     "rmsnorm_pallas",
 ]

@@ -8,20 +8,26 @@ recipe to the whole family of tests that dominate microbiome workloads
 devices"):
 
 * ``engine``         — the shared loop: ``Statistic`` protocol
-                       (hoist/per_perm split), batched ``lax.map``
-                       execution, p-value finishing, shard_map
-                       permutation-axis distribution.
+                       (hoist/per_perm split, with the batch-fused
+                       ``per_batch`` hook as the primary path — padded
+                       full-size order tiles, one trace for any K),
+                       p-value finishing, shard_map permutation-axis
+                       distribution.
 * ``permanova``      — pseudo-F from the centered Gower matrix
                        (``SS_total = tr(G)`` hoisted; per-permutation
                        gather-matmul).
-* ``anosim``         — Clarke's R with the rank transform hoisted.
+* ``anosim``         — Clarke's R with the rank transform hoisted and
+                       kept CONDENSED: the batched loop gathers the
+                       within-indicator by closed-form triangle indexing
+                       (``kernels.permute_reduce``) — no rank matrix.
 * ``permdisp``       — Anderson's dispersion-homogeneity F with the whole
                        ordination hoisted (matrix-free PCoA coordinates;
                        per-permutation only centroids + distances move).
 * ``partial_mantel`` — three-matrix partial correlation with ŷ
-                       residualized once and both inner products fused
-                       (optionally via the ``kernels.mantel_corr`` Pallas
-                       reduction).
+                       residualized once, square-free: both fused inner
+                       products stack as rows of ONE batched
+                       ``kernels.permute_reduce`` call sharing a single
+                       condensed gather.
 
 ``core.mantel.mantel`` is a thin client of the same engine. Each test
 ships a deliberately eager ``*_ref`` oracle mirroring scikit-bio's

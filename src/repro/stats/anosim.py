@@ -4,14 +4,22 @@ R = (mean between-group rank − mean within-group rank) / (n(n−1)/4), over
 the ranks of the condensed distances. The paper §4.2 split:
 
 * **hoisted** (computed once): the *ranks* — the expensive O(m log m) sort
-  happens exactly once, never per permutation — plus their square
-  symmetric form ``Rk`` (diag 0), the one-hot design ``Z``, the total rank
-  sum, and the within-pair count ``Σ_g n_g(n_g−1)/2`` (group sizes are
+  happens exactly once, never per permutation — kept CONDENSED, plus the
+  condensed within-group indicator of the ORIGINAL labels
+  (``w[k] = [codes[i_k] == codes[j_k]]``), the total rank sum, and the
+  within-pair count ``Σ_g n_g(n_g−1)/2`` (group sizes are
   permutation-invariant, so both denominators are too).
-* **per permutation**: only the *within-group rank sum* changes. With
-  permuted design rows ``Z_p`` it is ``½ Σ_g (Z_pᵀ Rk Z_p)_gg`` — the same
-  one-pass gather-matmul shape as PERMANOVA's ``SS_among``; the between
-  sum falls out by subtraction from the hoisted total.
+* **per permutation**: only the *within-group rank sum* changes — and
+  relabelling the samples by ``order`` makes display pair (i, j) a
+  within-pair iff the ORIGINAL pair (order[i], order[j]) is one, so
+
+      w_sum(p) = Σ_k ranks[k] · w[tri(order[i_k], order[j_k])]
+
+  is exactly the ``kernels.permute_reduce`` shape: the rank vector
+  streams once per B-permutation tile while the indicator is gathered by
+  closed-form triangle indexing. The square rank matrix the PR-1 loop
+  multiplied per permutation (``Z_pᵀ Rk Z_p``) is gone from the hot path
+  entirely — no n×n buffer survives anywhere in the test.
 
 ``anosim_ref`` mirrors scikit-bio's eager evaluation: per permutation it
 rebuilds the within-pair boolean mask over all m = n(n−1)/2 pairs and
@@ -29,7 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.scipy.stats import rankdata
 
-from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
+from repro.core.distance_matrix import (DistanceMatrix, condensed_index,
+                                        triangle_coords)
+from repro.kernels.permute_reduce_ops import permute_reduce
 from repro.stats import engine
 from repro.stats.engine import PermutationTestResult
 
@@ -46,67 +56,86 @@ def _rank_average(v: jax.Array) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("n",))
-def rank_transform_condensed(flat: jax.Array, n: int) -> dict:
-    """The rank hoist straight from a condensed vector — the entry point
-    for feature-backed sessions (``Workspace.from_features``), whose
-    distances live in ``repro.dist``'s condensed layout: the square
-    distance matrix is never formed; only the rank matrix itself (which
-    ANOSIM's per-permutation gather-matmul genuinely consumes) is
-    square."""
+def rank_transform_condensed(flat: jax.Array, n: int = 0) -> dict:
+    """The rank hoist straight from a condensed vector — everything about
+    the ranks that ANOSIM's per-permutation pass consumes, and nothing
+    square: since the batched loop gathers the condensed within-indicator
+    directly, the rank matrix is never materialized (``n`` is accepted
+    for backward compatibility but no longer needed)."""
     ranks = _rank_average(flat)                      # ranked exactly once
-    return {"rank_full": condensed_to_square(ranks, n),
-            "total_sum": jnp.sum(ranks)}
+    return {"ranks": ranks, "total_sum": jnp.sum(ranks)}
 
 
 @partial(jax.jit, static_argnames=("n",))
 def rank_transform(dm_data: jax.Array, n: int) -> dict:
-    """The O(m log m) rank hoist, split out so a Workspace can cache it.
-
-    Returns the square symmetric rank matrix (diag 0) and the total rank
-    sum — everything about the ranks that ANOSIM's per-permutation pass
-    consumes. Bitwise-identical whether computed here (once per session)
-    or inside ``AnosimStatistic.hoist`` (once per test)."""
+    """The O(m log m) rank hoist from a square matrix, split out so a
+    Workspace can cache it. Bitwise-identical whether computed here (once
+    per session) or inside ``AnosimStatistic.hoist`` (once per test)."""
     iu = np.triu_indices(n, k=1)
-    return rank_transform_condensed(dm_data[iu], n)
+    return rank_transform_condensed(dm_data[iu])
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["dm", "grouping", "pre"],
-         meta_fields=["n", "num_groups"])
+         meta_fields=["n", "num_groups", "kernel", "interpret"])
 @dataclasses.dataclass
 class AnosimStatistic:
-    """Clarke's R with ranks hoisted out of the Monte-Carlo loop.
+    """Clarke's R with ranks hoisted out of the Monte-Carlo loop, on the
+    condensed batch-fused path.
 
-    ``pre`` optionally carries the session-level rank hoist (the
+    ``dm`` may be a square (n, n) matrix, a condensed (m,) vector, or
+    ``None`` when ``pre`` carries the session-level rank hoist (the
     ``rank_transform`` dict from a Workspace's ``HoistCache``) so
-    back-to-back tests on one matrix sort the condensed distances once."""
+    back-to-back tests on one matrix sort the condensed distances once.
+    ``kernel`` picks the ``permute_reduce`` backend for the batched
+    path."""
 
-    dm: jax.Array          # (n, n) validated distance matrix
-    grouping: jax.Array    # (n,) int group codes in [0, num_groups)
+    dm: Optional[jax.Array]   # (n, n) square / (m,) condensed / None w/ pre
+    grouping: jax.Array       # (n,) int group codes in [0, num_groups)
     n: int
     num_groups: int
     pre: Optional[dict] = None   # optional pre-hoisted rank_transform dict
+    kernel: str = "xla"
+    interpret: Optional[bool] = None
 
     def hoist(self):
-        rt = self.pre if self.pre is not None else \
-            rank_transform(self.dm, self.n)
-        rank_full = rt["rank_full"]
-        z = jax.nn.one_hot(self.grouping, self.num_groups,
-                           dtype=rank_full.dtype)
-        sizes = jnp.sum(z, axis=0)
+        from repro.core.mantel import _as_condensed
+        if self.pre is not None:
+            rt = self.pre
+        else:
+            rt = rank_transform_condensed(_as_condensed(self.dm, self.n))
+        ii, jj = triangle_coords(self.n)
+        codes = self.grouping.astype(jnp.int32)
+        # condensed within-indicator over the ORIGINAL labels: permuting
+        # the samples only permutes which pair is looked up, so this is
+        # the one gatherable hoist the whole null distribution needs
+        within = (codes[ii] == codes[jj]).astype(rt["ranks"].dtype)
+        sizes = jnp.zeros(self.num_groups,
+                          dtype=rt["ranks"].dtype).at[codes].add(1.0)
         m = self.n * (self.n - 1) / 2.0
-        return {"rank_full": rank_full, "z": z,
+        within_count = jnp.sum(sizes * (sizes - 1)) / 2.0
+        return {"ranks": rt["ranks"], "within": within, "ii": ii, "jj": jj,
                 "total_sum": rt["total_sum"],
-                "within_count": jnp.sum(sizes * (sizes - 1)) / 2.0,
-                "between_count": m - jnp.sum(sizes * (sizes - 1)) / 2.0,
+                "within_count": within_count,
+                "between_count": m - within_count,
                 "divisor": self.n * (self.n - 1) / 4.0}
 
-    def per_perm(self, inv, order):
-        z = inv["z"][order]                          # O(n·k) label gather
-        w_sum = 0.5 * jnp.sum(z * (inv["rank_full"] @ z))
+    def _finish_r(self, inv, w_sum):
         r_w = w_sum / inv["within_count"]
         r_b = (inv["total_sum"] - w_sum) / inv["between_count"]
         return (r_b - r_w) / inv["divisor"]
+
+    def per_perm(self, inv, order):
+        o = order.astype(jnp.int32)
+        k = condensed_index(o[inv["ii"]], o[inv["jj"]], self.n)
+        w_sum = jnp.dot(inv["ranks"], inv["within"][k])
+        return self._finish_r(inv, w_sum)
+
+    def per_batch(self, inv, orders):
+        w_sums = permute_reduce(inv["within"], inv["ranks"][None, :],
+                                orders, inv["ii"], inv["jj"],
+                                impl=self.kernel, interpret=self.interpret)
+        return self._finish_r(inv, w_sums[0])
 
 
 def anosim(dm: DistanceMatrix, grouping, permutations: int = 999,
@@ -115,10 +144,8 @@ def anosim(dm: DistanceMatrix, grouping, permutations: int = 999,
 
     Thin wrapper over a one-shot ``api.Workspace`` — identical p-values
     per key; a session running several tests should hold its own
-    Workspace so the rank hoist is shared. Default batch 32 (vs mantel's
-    8): the per-perm operand here is the (n, k) design, not an (n, n)
-    gathered matrix, so a bigger batch amortizes the rank-matrix read at
-    negligible memory cost."""
+    Workspace so the rank hoist is shared. Batches of 32 permutations
+    share each streamed pass over the hoisted condensed ranks."""
     from repro.api.workspace import Workspace
     # validate=False: trust the DistanceMatrix as constructed, exactly like
     # the pre-session implementation that read dm.data directly

@@ -17,9 +17,15 @@ This module owns the loop so each statistic only declares the split:
   ``lax.map`` (and is auto-vmapped over each batch). Implementations are
   ``jax.tree_util.register_dataclass`` pytrees so the jitted engine caches
   its trace per statistic *class* (+ static metadata), not per call.
-  An optional ``per_batch(invariants, orders) -> (B,)`` hook lets a
-  statistic take over whole-batch execution (e.g. to route the reduction
-  through the Pallas kernel in ``repro.kernels.mantel_corr``).
+  The ``per_batch(invariants, orders) -> (B,)`` hook is the engine's
+  PRIMARY execution path when a statistic defines it: the engine
+  generates the (K, n) orders once, pads them up to full
+  ``batch_size``-row tiles (wrapping real permutations, so ONE jit trace
+  serves every K — no trailing-block recompile), and hands each tile to
+  the statistic, which typically routes it through the batched
+  ``repro.kernels.permute_reduce`` so the hoisted invariant streams once
+  per tile instead of once per permutation. ``ExecConfig.batch_size`` is
+  exactly the kernel's B grid dimension.
 * ``permutation_test`` — permutation-order generation, batched execution,
   p-value finishing. Clients: ``core.mantel.mantel``, ``stats.permanova``,
   ``stats.anosim``, ``stats.partial_mantel``.
@@ -171,21 +177,22 @@ def _null_distribution(stat, key, permutations: int, batch_size: int):
 
     orders = permutation_orders(key, permutations, stat.n)
     per_batch = getattr(stat, "per_batch", None)
-    if per_batch is not None:
-        # full blocks stream through lax.map; a short trailing block (when
-        # batch_size doesn't divide K, e.g. the canonical 999) runs once
-        # more — the statistic's batch path is never silently bypassed.
-        full = (permutations // batch_size) * batch_size
-        parts = []
-        if full:
-            order_blocks = orders[:full].reshape(full // batch_size,
-                                                 batch_size, stat.n)
-            parts.append(jax.lax.map(lambda o: per_batch(invariants, o),
-                                     order_blocks).reshape(full))
-        if full < permutations:
-            parts.append(per_batch(invariants, orders[full:]))
-        permuted = (jnp.concatenate(parts) if parts
-                    else jnp.zeros((0,), dtype=observed.dtype))
+    if per_batch is not None and permutations:
+        # ONE trace serves every K: orders are padded up to full
+        # batch_size tiles by wrapping real permutations (each row must
+        # stay a valid order for the statistic's gathers), every tile
+        # goes through the same per_batch trace, and the padded tail is
+        # masked off before finishing. The pre-PR-5 trailing-block
+        # special case traced a SECOND jit program whenever batch_size
+        # didn't divide K (the canonical 999 vs batch 32) — same math,
+        # double the compile time and cache footprint.
+        num_tiles = -(-permutations // batch_size)
+        total = num_tiles * batch_size
+        if total != permutations:
+            orders = orders[jnp.arange(total) % permutations]
+        tiles = orders.reshape(num_tiles, batch_size, stat.n)
+        permuted = jax.lax.map(lambda o: per_batch(invariants, o),
+                               tiles).reshape(total)[:permutations]
     else:
         # lax.map auto-vmaps per_perm over each batch: the batched gathers
         # + one fused reduce, with peak memory of one batch of matrices.

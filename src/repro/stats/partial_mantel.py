@@ -10,16 +10,17 @@ here than for the plain Mantel test:
 
 * **hoisted** (computed once): x̄ and ‖x−x̄‖; the centered-normalized ŷ
   and ẑ; ``r_yz`` (y and z are never permuted, so it is a constant of the
-  null distribution!); and the *residualized* numerator matrix
+  null distribution!); and the *residualized* numerator vector
   ``ŷ_res = (ŷ − r_yz·ẑ)/√(1−r_yz²)`` — the regression of ŷ on ẑ is done
-  exactly once, not per permutation.
-* **per permutation**: two fused gather-multiply-reduces over the same
-  permuted X — ``⟨x_p, ŷ_res⟩`` (the numerator, pre-residualized) and
-  ``⟨x_p, ẑ⟩`` (= r_xz) — then a scalar finish ``num/√(1−r_xz²)``. Both
-  inner products use Mantel's Σŷ=0 algebra (the mean term vanishes), so
-  each is exactly the reduction ``kernels.mantel_corr`` implements;
-  ``PartialMantelPallasStatistic.per_batch`` routes them through that
-  Pallas kernel with Ŷ-tile reuse across the batch.
+  exactly once, not per permutation. Every hoist is CONDENSED (m =
+  n(n−1)/2): no square form of any operand is ever built.
+* **per permutation**: ONE closed-form condensed gather of the permuted
+  x, shared by both multiply-reduces — ``⟨x_p, ŷ_res⟩`` (the numerator,
+  pre-residualized) and ``⟨x_p, ẑ⟩`` (= r_xz) — then a scalar finish
+  ``num/√(1−r_xz²)``. Both inner products use Mantel's Σŷ=0 algebra (the
+  mean term vanishes). The engine's batch path stacks (ŷ_res, ẑ) as two
+  rows of one ``kernels.permute_reduce`` call, so the B-permutation tile
+  streams each invariant once and gathers x once for the pair.
 
 ``partial_mantel_ref`` mirrors the classical eager evaluation (vegan /
 scikit-bio style): per permutation it materializes the permuted condensed
@@ -36,119 +37,103 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distance_matrix import DistanceMatrix, condensed_to_square
-from repro.kernels.mantel_corr import mantel_corr
+from repro.core.distance_matrix import (DistanceMatrix, condensed_index,
+                                        triangle_coords)
+from repro.kernels.permute_reduce_ops import permute_reduce
 from repro.stats import engine
 from repro.stats.engine import PermutationTestResult
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["x", "y", "z", "pre"], meta_fields=["n"])
+         data_fields=["x", "y", "z", "pre"],
+         meta_fields=["n", "kernel", "interpret"])
 @dataclasses.dataclass
 class PartialMantelStatistic:
-    """r_xy·z with ŷ residualized against ẑ once, outside the loop.
+    """r_xy·z with ŷ residualized against ẑ once, outside the loop —
+    square-free like ``MantelStatistic``.
 
-    ``pre`` optionally carries the session-level hoist (the invariants
-    dict assembled from three Workspaces' cached ``condensed_moments`` by
+    ``x``/``y``/``z`` may be square (n, n) matrices or condensed (m,)
+    vectors. ``pre`` optionally carries the session-level hoist
+    (``{"normxm", "r_yz", "y_res", "z"}`` — all condensed — assembled
+    from three Workspaces' cached ``condensed_moments`` by
     ``Workspace.partial_mantel``) so repeated tests reuse the
-    normalization and residualization passes."""
+    normalization and residualization passes and the fixed sides never
+    build a square form. ``kernel`` picks the ``permute_reduce`` backend
+    for the batched path (``"xla"`` / ``"pallas"``)."""
 
-    x: jax.Array           # (n, n) permuted matrix
-    y: jax.Array           # (n, n) held fixed
-    z: jax.Array           # (n, n) held fixed (the control)
+    x: jax.Array           # permuted side
+    y: Optional[jax.Array]  # held fixed; may be None when pre is given
+    z: Optional[jax.Array]  # held fixed (the control); ditto
     n: int
     pre: Optional[dict] = None
+    kernel: str = "xla"
+    interpret: Optional[bool] = None
 
     def hoist(self):
+        from repro.core.mantel import _as_condensed
+        inv = {"xc": _as_condensed(self.x, self.n)}
         if self.pre is not None:
-            return dict(self.pre)
-        iu = np.triu_indices(self.n, k=1)
-        x_flat = self.x[iu]
-        xm = x_flat - x_flat.mean()
-        normxm = jnp.linalg.norm(xm)
+            inv.update(self.pre)
+        else:
+            xm = inv["xc"] - inv["xc"].mean()
+            inv["normxm"] = jnp.linalg.norm(xm)
 
-        def _hat(mat):
-            flat = mat[iu]
-            centered = flat - flat.mean()
-            return centered / jnp.linalg.norm(centered)
+            def _hat(mat):
+                flat = _as_condensed(mat, self.n)
+                centered = flat - flat.mean()
+                return centered / jnp.linalg.norm(centered)
 
-        yhat, zhat = _hat(self.y), _hat(self.z)
-        r_yz = jnp.dot(yhat, zhat)                   # permutation-invariant
-        y_res = (yhat - r_yz * zhat) / jnp.sqrt(1.0 - r_yz * r_yz)
-        return {"normxm": normxm, "r_yz": r_yz,
-                "y_res_full": condensed_to_square(y_res, self.n),
-                "z_full": condensed_to_square(zhat, self.n)}
+            yhat, zhat = _hat(self.y), _hat(self.z)
+            r_yz = jnp.dot(yhat, zhat)               # permutation-invariant
+            inv["r_yz"] = r_yz
+            inv["y_res"] = (yhat - r_yz * zhat) / jnp.sqrt(1.0 - r_yz * r_yz)
+            inv["z"] = zhat
+        inv["ii"], inv["jj"] = triangle_coords(self.n)
+        return inv
 
     def per_perm(self, inv, order):
-        xp = self.x[order][:, order]                 # contiguous row gathers
-        scale = 2.0 * inv["normxm"]                  # Σŷ_res = Σẑ = 0
-        num = jnp.vdot(xp, inv["y_res_full"]) / scale
-        r_xz = jnp.vdot(xp, inv["z_full"]) / scale
+        o = order.astype(jnp.int32)
+        k = condensed_index(o[inv["ii"]], o[inv["jj"]], self.n)
+        xg = inv["xc"][k]                            # ONE gather, two dots
+        num = jnp.dot(xg, inv["y_res"]) / inv["normxm"]
+        r_xz = jnp.dot(xg, inv["z"]) / inv["normxm"]
+        return num / jnp.sqrt(1.0 - r_xz * r_xz)
+
+    def per_batch(self, inv, orders):
+        # (ŷ_res, ẑ) stacked: the tile's x gather is shared by both
+        # reductions, and each invariant streams once per B permutations
+        ys = jnp.stack([inv["y_res"], inv["z"]])
+        stats = permute_reduce(inv["xc"], ys, orders, inv["ii"], inv["jj"],
+                               impl=self.kernel, interpret=self.interpret)
+        num = stats[0] / inv["normxm"]
+        r_xz = stats[1] / inv["normxm"]
         return num / jnp.sqrt(1.0 - r_xz * r_xz)
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["x", "y", "z", "pre"],
-         meta_fields=["n", "block", "interpret"])
+         meta_fields=["n", "kernel", "interpret"])
 @dataclasses.dataclass
 class PartialMantelPallasStatistic(PartialMantelStatistic):
-    """Same statistic; per-batch path through ``kernels.mantel_corr``.
+    """Same statistic with the Pallas ``permute_reduce`` backend pinned —
+    kept as a named class for the ``kernel="pallas"`` dispatch and
+    backward compatibility."""
 
-    ``interpret=None`` dispatches by backend (TPU-native on a TPU, the
-    interpreter on CPU) — lane width follows the resolved mode."""
-
-    block: int = 256
-    interpret: Optional[bool] = None
-
-    def _tile(self):
-        # pad n to the next lane multiple *before* choosing the tile, so a
-        # small n never ends up with pad ≈ b−1 (e.g. n=100 now tiles as one
-        # 104-block with pad 4, not 96-blocks with pad 92 → ~4x the work).
-        # Native TPU lowering needs 128-wide lanes; the interpreter is free.
-        from repro.kernels.center_matvec_ops import (pick_block,
-                                                     resolve_interpret)
-        lane = 8 if resolve_interpret(self.interpret) else 128
-        padded = -(-self.n // lane) * lane
-        b = pick_block(padded, self.block, lane, floor=lane)
-        padded = -(-padded // b) * b
-        return b, padded - self.n
-
-    def hoist(self):
-        # the padded ŷ_res/ẑ are permutation-invariant too — pad once here,
-        # not inside the per-batch loop body
-        inv = super().hoist()
-        _, pad = self._tile()
-        widths = ((0, pad), (0, pad))
-        inv["y_res_pad"] = jnp.pad(inv["y_res_full"], widths) if pad \
-            else inv["y_res_full"]
-        inv["z_pad"] = jnp.pad(inv["z_full"], widths) if pad \
-            else inv["z_full"]
-        return inv
-
-    def per_batch(self, inv, orders):
-        b, pad = self._tile()
-        xp = jax.vmap(lambda o: self.x[o][:, o])(orders)
-        if pad:
-            xp = jnp.pad(xp, ((0, 0), (0, pad), (0, pad)))
-        scale = 2.0 * inv["normxm"]
-        corr = partial(mantel_corr, block_m=b, block_n=b,
-                       interpret=self.interpret)
-        num = corr(xp, inv["y_res_pad"]) / scale     # two fused reductions
-        r_xz = corr(xp, inv["z_pad"]) / scale        # over one gathered Xp
-        return num / jnp.sqrt(1.0 - r_xz * r_xz)
+    kernel: str = "pallas"
 
 
 def partial_mantel(x: DistanceMatrix, y: DistanceMatrix, z: DistanceMatrix,
                    permutations: int = 999,
                    key=None,
                    alternative: str = "two-sided",
-                   batch_size: int = 8,
+                   batch_size: int = 32,
                    kernel: str = "xla") -> PermutationTestResult:
-    """Hoisted+fused partial Mantel. ``kernel="pallas"`` routes the two
-    inner products through the batched Pallas reduction (interpret mode on
-    CPU; the TPU-native path at scale). Thin wrapper over a one-shot
-    ``api.Workspace`` — identical p-values per key; sessions hold their
-    own Workspace to share the normalization hoists."""
+    """Hoisted+fused partial Mantel on the condensed batch loop.
+    ``kernel="pallas"`` routes the stacked inner products through the
+    explicit-VMEM ``permute_reduce`` kernel (interpret mode on CPU; the
+    TPU-native path at scale) instead of its XLA twin. Thin wrapper over
+    a one-shot ``api.Workspace`` — identical p-values per key; sessions
+    hold their own Workspace to share the normalization hoists."""
     from repro.api.config import ExecConfig
     from repro.api.workspace import Workspace
     cfg = ExecConfig(kernel=kernel)      # validates the kernel name too

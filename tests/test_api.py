@@ -104,18 +104,45 @@ def test_hoist_cache_counters():
 
 def test_workspace_mantel_shares_both_sides():
     """Both operands' moments come from their own session caches: testing
-    x against two matrices re-normalizes x zero extra times, a shared
-    y-Workspace is normalized once across sessions, and the permuted
-    x-side never pays for the O(n²) square hat form."""
+    x against two different y-sides reuses the x-side condensed moments
+    (zero extra normalization passes), a shared y-Workspace is normalized
+    once across sessions — and NO session builds any square artifact:
+    the condensed batch loop needs neither a square hat form nor square
+    distances."""
     x, y, z = Workspace(_dm(4)), Workspace(_dm(5)), Workspace(_dm(6))
     x.mantel(y, permutations=19, key=KEY)
-    x.mantel(z, permutations=19, key=KEY)
+    x.mantel(z, permutations=19, key=KEY)            # new y-side...
     x.partial_mantel(y, z, permutations=19, key=KEY)
     for ws in (x, y, z):
-        assert ws.cache.build_count("moments") == 1
-    assert x.cache.build_count("hat_full") == 0      # x is only permuted
-    assert y.cache.build_count("hat_full") == 1
-    assert z.cache.build_count("hat_full") == 1
+        assert ws.cache.build_count("moments") == 1  # ...same x-side hoist
+        assert ws.cache.build_count("condensed") == 1
+        assert ws.cache.build_count("square") == 0
+        assert ws.cache.build_count("hat_full") == 0  # artifact retired
+    # the x-side moments were HIT (reused) on the second and third tests
+    assert x.cache.counts("moments")[0] >= 2
+
+
+def test_workspace_mantel_family_square_free_on_features():
+    """Satellite acceptance: a Mantel-family call on a feature-backed
+    Workspace performs ZERO ``"square"`` cache builds — the whole family
+    (and ANOSIM's ranks) runs off condensed storage."""
+    k1, k2, k3 = (jax.random.PRNGKey(s) for s in (50, 51, 52))
+    t = np.abs(np.asarray(jax.random.normal(k1, (30, 7))))
+    ws = Workspace.from_features(t, metric="braycurtis")
+    ws_y = Workspace.from_features(
+        np.abs(np.asarray(jax.random.normal(k2, (30, 7)))))
+    ws_z = Workspace.from_features(
+        np.abs(np.asarray(jax.random.normal(k3, (30, 7)))))
+    g = _grouping(30)
+    ws.pcoa(dimensions=3)
+    ws.permanova(g, permutations=19, key=KEY)
+    ws.permdisp(g, permutations=19, key=KEY, dimensions=3)
+    ws.anosim(g, permutations=19, key=KEY)
+    ws.mantel(ws_y, permutations=19, key=KEY)
+    ws.partial_mantel(ws_y, ws_z, permutations=19, key=KEY)
+    for w in (ws, ws_y, ws_z):
+        assert w.cache.build_count("square") == 0
+        assert w._dm is None                    # never even wrapped one
 
 
 # --------------------------------------------------------------------------

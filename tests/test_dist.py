@@ -217,15 +217,17 @@ def test_from_features_matches_square_workspace():
     ra = ws.anosim(g, permutations=49, key=KEY)
     rb = ws2.anosim(g, permutations=49, key=KEY)
     assert ra.statistic == rb.statistic and ra.p_value == rb.p_value
-    # the mantel family works too — via the lazily-counted square
+    # the mantel family works too — fully condensed, no square demanded
     m = ws.mantel(ws2, permutations=49, key=KEY)
     assert m.statistic == pytest.approx(1.0, abs=1e-5)
-    assert "square" in ws.cache
+    assert "square" not in ws.cache
+    assert ws._dm is None
 
 
-def test_mantel_fixed_sides_stay_square_free():
-    """The fixed side of (partial) Mantel rides in through its cached hat
-    form only — a feature-backed y/z never materializes its square, and
+def test_mantel_all_sides_stay_square_free():
+    """EVERY side of (partial) Mantel stays condensed: the permuted side's
+    gathers go through closed-form triangle indexing (no square x), the
+    fixed sides ride in as condensed hat vectors (no square y/z), and
     the x-side moments consume the production's fused norm scalar."""
     x = _table(20, 20, 6)
     ws_x = Workspace.from_features(x, metric="euclidean")
@@ -233,7 +235,7 @@ def test_mantel_fixed_sides_stay_square_free():
     ws_z = Workspace.from_features(_table(21, 20, 6), metric="euclidean")
     ws_x.mantel(ws_y, permutations=19, key=KEY)
     ws_x.partial_mantel(ws_y, ws_z, permutations=19, key=KEY)
-    assert "square" in ws_x.cache           # permuted side needs gathers
+    assert "square" not in ws_x.cache and ws_x._dm is None
     assert "square" not in ws_y.cache and ws_y._dm is None
     assert "square" not in ws_z.cache and ws_z._dm is None
     # moments() consumed the fused production scalars, no re-reduction
@@ -305,7 +307,7 @@ def test_refresh_feature_backed_and_noarg():
     x = _table(14, 18, 5)
     ws = Workspace.from_features(x, metric="braycurtis")
     r0 = ws.pcoa(dimensions=3)
-    ws.mantel(ws, permutations=19, key=KEY)      # force the lazy square
+    ws.dm                                        # force the lazy square
     assert "square" in ws.cache
 
     ws.refresh()                                  # no-arg: caches only

@@ -69,6 +69,56 @@ def test_engine_runs_custom_statistic():
     assert r.sample_size == 10 and r.permutations == 33
 
 
+def test_engine_per_batch_single_trace_any_k():
+    """Satellite acceptance: the per_batch path pads orders to FULL
+    batch_size tiles (wrapping real permutations) and masks the tail, so
+    one jit trace serves every K — the pre-change engine traced a second
+    program whenever batch_size didn't divide K (e.g. the canonical
+    999 % 32)."""
+    traced_shapes = []
+
+    @partial(jax.tree_util.register_dataclass,
+             data_fields=["v"], meta_fields=["n"])
+    @dataclasses.dataclass
+    class Probe:
+        v: jax.Array
+        n: int
+
+        def hoist(self):
+            return {"v": self.v}
+
+        def per_perm(self, inv, order):
+            return inv["v"][order[0]]
+
+        def per_batch(self, inv, orders):
+            traced_shapes.append(tuple(orders.shape))   # records per TRACE
+            return inv["v"][orders[:, 0]]
+
+    r = permutation_test(Probe(jnp.arange(10.0), 10), permutations=999,
+                         key=KEY, batch_size=32)
+    assert traced_shapes == [(32, 10)]     # one trace, full tiles only
+    assert r.permutations == 999 and 0.0 < r.p_value <= 1.0
+    # batch_size > K still runs (one padded tile) without a second trace
+    traced_shapes.clear()
+    r2 = permutation_test(Probe(jnp.arange(10.0) + 1.0, 10),
+                          permutations=5, key=KEY, batch_size=8)
+    assert traced_shapes == [(8, 10)]
+    assert r2.permutations == 5
+
+
+def test_engine_results_invariant_to_batch_size():
+    """The tile size is an execution knob, never a semantic one: any
+    batch_size (dividing K or not) gives bitwise-identical statistics
+    and p-values for the same key, on the batch-fused mantel path."""
+    x, y = _dm(0), _dm(1)
+    rs = [permutation_test(MantelStatistic(x.data, y.data, len(x)),
+                           permutations=45, key=KEY, batch_size=bs)
+          for bs in (1, 7, 32, 64)]
+    for r in rs[1:]:
+        assert r.statistic == rs[0].statistic
+        assert r.p_value == rs[0].p_value
+
+
 def test_engine_rejects_bad_alternative():
     x, y = _dm(0), _dm(1)
     with pytest.raises(ValueError):
