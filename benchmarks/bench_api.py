@@ -24,24 +24,18 @@ import numpy as np
 from repro.api.config import ExecConfig
 from repro.api.workspace import Workspace
 from repro.core.distance_matrix import random_distance_matrix
+from repro.obs.ledger import HOIST_PASSES
 
 _NUM_GROUPS = 8
 _DIMS = 10
 
-# Analytic n²-pass cost of building each HoistCache artifact (reads +
-# writes of n²-sized buffers, fp32). These mirror the implementations:
-#   operator  — row/global means of E in ONE read of D (the paper's hoist)
-#   gram      — fused centering: 2 reads + 2 writes (paper Algorithm 2)
-#   condensed — triangle extraction from the square: m-element gather +
-#               m-element write ≈ 1 full pass (m = n(n−1)/2 ≈ ½n²)
-#   ranks     — O(m log m) sort of the cached condensed + condensed rank
-#               write ≈ 1 pass (square-free since the permute_reduce loop:
-#               no rank matrix is ever materialized)
-#   moments   — condensed read + centered-norm reduce ≈ ½ pass (O(m))
-#   coords    — the fsvd solve: 4 operator matvecs (range find + 2 power
-#              iterations + projection), each one read of D
-_PASSES = {"operator": 1.0, "gram": 4.0, "condensed": 1.0, "ranks": 1.0,
-           "moments": 0.5, "coords": 4.0}
+# The audited n²-pass cost table lives in ONE place now —
+# ``repro.obs.ledger.HOIST_PASSES`` (the same registry the instrumented
+# runtime charges live, so a ``Workspace.report()``'s hoist totals and
+# this benchmark's accounting can never drift apart). A parity test in
+# tests/test_obs.py pins the published 11-vs-16 session passes against
+# the registry.
+_PASSES = HOIST_PASSES
 
 
 def _artifact(key):

@@ -33,25 +33,19 @@ import numpy as np
 from repro.api.config import ExecConfig
 from repro.api.workspace import Workspace
 from repro.dist import condensed_size, pairwise_distances
+from repro.obs.ledger import FEATURE_HOIST_PASSES, HOIST_PASSES
 
 _NUM_GROUPS = 8
 _DIMS = 10
 _FEATURES = 128
 
-# Analytic n²-pass cost of each HoistCache build (n²-sized fp32 passes;
-# the production's O(n·d) feature reads are recorded separately since
-# they are identical in both modes). Mirrors the implementations:
-#   condensed+dist_means — the tiled production writes m = n(n−1)/2 ≈ ½n²
-#       entries once; the means ride the same sweep for free (0 passes)
-#   operator  (fused)    — wraps the production artifacts: free
-#   operator  (baseline) — row/global means: ONE read of square D
-#   square    (baseline) — the n² write of the materialized matrix
-#   gram      (baseline) — fused centering: 2 reads + 2 writes
-#   coords               — 4 fsvd matvecs; each reads condensed (½ pass)
-#       in fused mode, square D (1 pass) in baseline mode
-_PASSES_FUSED = {"condensed": 0.5, "dist_means": 0.0, "operator": 0.0,
-                 "coords": 2.0}
-_PASSES_BASE = {"operator": 1.0, "square": 1.0, "gram": 4.0, "coords": 4.0}
+# The audited pass tables live in ONE place now — ``repro.obs.ledger``
+# (the feature-backed vs square-backed columns the instrumented
+# HoistCache charges live). The production's O(n·d) feature reads stay
+# out of the pass accounting since they are identical in both modes
+# (``repro.obs.ledger.production_floats`` is their own op).
+_PASSES_FUSED = FEATURE_HOIST_PASSES
+_PASSES_BASE = HOIST_PASSES
 
 
 def _artifact(key):

@@ -37,6 +37,13 @@ import jax
 from benchmarks.common import row, time_fn
 from repro.core.distance_matrix import random_distance_matrix
 from repro.core.mantel import mantel
+# the audited per-permutation traffic models live in ONE place now —
+# the same registry the instrumented engine charges live; a parity test
+# in tests/test_obs.py pins the published 10.97x headline against it
+from repro.obs.ledger import perm_traffic_floats
+
+__all__ = ["mantel_numpy_original", "perm_traffic_floats", "run_suite",
+           "run"]
 
 
 def mantel_numpy_original(x: np.ndarray, y: np.ndarray, permutations: int,
@@ -55,17 +62,6 @@ def mantel_numpy_original(x: np.ndarray, y: np.ndarray, permutations: int,
         permuted_stats[p] = pearsonr(x_perm_flat, y_flat).statistic
     count = (np.abs(permuted_stats) >= abs(orig_stat)).sum()
     return orig_stat, (count + 1) / (permutations + 1)
-
-
-def perm_traffic_floats(n: int, batch: int) -> dict:
-    """Audited analytic fp32 floats moved PER PERMUTATION by each
-    formulation of the Mantel inner loop (see module docstring)."""
-    m = n * (n - 1) // 2
-    return {
-        "original": 4 * n * n + 10 * m,
-        "square_gather": 6 * n * n,
-        "condensed_fused": m * (1.0 + 3.0 / batch) + n,
-    }
 
 
 def run_suite(sizes=(2048, 4096), permutations=999, batch=32,

@@ -28,10 +28,16 @@ Suites:
     batch-fused, at n ∈ {2048, 4096}, K=999); writes BENCH_mantel.json.
     Acceptance gate: ≥ 8x less traffic than the square-gather loop.
 
-``--smoke`` runs the dist + api + mantel suites at tiny sizes with NO artifact
-written — the CI guard that the benchmark entry points can't silently
-rot (exercises the same code paths; the tracked BENCH_*.json files are
-only ever written by full-size runs).
+``--smoke`` runs the dist + api + mantel suites at tiny sizes with NO
+BENCH artifact written — the CI guard that the benchmark entry points
+can't silently rot (exercises the same code paths; the tracked
+BENCH_*.json files are only ever written by full-size runs). It then
+runs the full 6-analysis battery on an observability-enabled
+feature-backed Workspace under the recompile sentinel — the padded
+``per_batch`` path must compile exactly ONE ``kernels.permute_reduce``
+program per invariant-stack shape across different K values — and
+writes the session's ``RunReport`` JSON (``--report``, default
+``RunReport_smoke.json``; CI uploads it as a workflow artifact).
 """
 
 import argparse
@@ -43,12 +49,61 @@ from benchmarks import bench_api, bench_center, bench_dist, bench_mantel, \
     bench_pcoa, bench_stats, bench_validation
 
 
+def _smoke_report(path: str) -> None:
+    """The observability acceptance battery: every analysis spanned,
+    every hoist/batch charged, the recompile sentinel gating."""
+    import numpy as np
+
+    from repro.api.config import ExecConfig
+    from repro.api.workspace import Workspace
+    from repro.obs import ObsConfig, sentinel
+
+    rng = np.random.default_rng(0)
+    cfg = ExecConfig(obs=ObsConfig(enabled=True))
+    ws = Workspace.from_features(rng.random((64, 16), dtype=np.float32) + .01,
+                                 config=cfg)
+    wsy = Workspace.from_features(rng.random((64, 16), dtype=np.float32) + .01,
+                                  config=cfg)
+    wsz = Workspace.from_features(rng.random((64, 16), dtype=np.float32) + .01,
+                                  config=cfg)
+    grouping = rng.integers(0, 4, 64)
+
+    # the gate: the battery below runs the batched condensed loop for
+    # three statistics (Mantel S=1 / ANOSIM S=1 — same program — and
+    # partial Mantel S=2) at TWO different K values each path; more than
+    # 2 distinct kernels.permute_reduce programs means a shape leaked
+    # back into the trace signature (the pre-PR-5 trailing-block bug)
+    with sentinel.expect("kernels.permute_reduce", max_programs=2):
+        ws.pcoa(dimensions=8)
+        ws.permanova(grouping, permutations=49)
+        ws.permdisp(grouping, permutations=49, dimensions=8)
+        ws.anosim(grouping, permutations=49)
+        ws.mantel(wsy, permutations=49)
+        ws.mantel(wsy, permutations=17)      # second K: same program
+        ws.partial_mantel(wsy, wsz, permutations=49)
+
+    report = ws.report(meta={"suite": "smoke"})
+    report.save(path)
+    led = report.ledger
+    print(f"\n# smoke RunReport -> {path}")
+    print(f"#   hoist passes {led['hoist_passes']:.1f}  "
+          f"total {led['total_bytes'] / 1e6:.2f} MB analytic  "
+          f"ops {sorted(led['by_op'])}")
+    print(f"#   compile window: "
+          f"{ {k: v['programs'] for k, v in report.compile.items()} }")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes / fewer repeats")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: dist+api at tiny sizes, no artifacts")
+                    help="CI smoke: dist+api+mantel at tiny sizes (no "
+                         "BENCH artifacts) + the obs-instrumented battery "
+                         "under the recompile sentinel")
+    ap.add_argument("--report", default="RunReport_smoke.json",
+                    help="where --smoke writes the RunReport JSON "
+                         "(uploaded by CI as a workflow artifact)")
     ap.add_argument("--suite", default="paper",
                     choices=("paper", "stats", "pcoa", "api", "dist",
                              "mantel"),
@@ -71,8 +126,10 @@ def main() -> None:
         bench_api.run(sizes=(128,), permutations=49, out_json=None)
         bench_mantel.run_suite(sizes=(64,), permutations=19, batch=8,
                                out_json=None)
+        _smoke_report(args.report)
         print("\n# smoke OK — dist + api + mantel suites ran end-to-end "
-              "(no artifacts written)")
+              "(no BENCH artifacts written) + obs battery passed the "
+              "recompile gate")
         return
 
     if args.suite == "mantel":

@@ -28,6 +28,12 @@ loop — the audited analytic accounting is ``BENCH_mantel.json``, via
 first use and reused by every later test; one ``ExecConfig`` carries
 every execution knob; every result records its RNG key.
 
+The primary session runs with **observability on**
+(``ExecConfig(obs=ObsConfig(enabled=True))``): every analysis and hoist
+is a timed span, every build/batch is charged to the analytic traffic
+ledger, and the run ends by printing the span tree and the ledger
+totals — the same ``RunReport`` document CI archives from ``--smoke``.
+
     PYTHONPATH=src python examples/community_analysis.py [--n 2048]
 
 Legacy style (still supported — each call is a thin wrapper over a
@@ -53,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ExecConfig, Workspace
+from repro.obs import ObsConfig
 
 
 def simulate_study(key, n, num_groups=4, dim=8):
@@ -86,8 +93,11 @@ def main(n: int = 2048, permutations: int = 999):
     # operator means fused into the sweep. ExecConfig is where execution
     # knobs go (metric=..., pairwise_impl="pallas", matvec_impl="pallas",
     # a mesh for the distributed paths, ...) — defaults suit one CPU/TPU.
+    # obs=ObsConfig(enabled=True) turns the primary session's telemetry
+    # on: spans + analytic traffic ledger (off by default: zero overhead).
     ws = Workspace.from_features(table_a, metric="euclidean",
-                                 config=ExecConfig())
+                                 config=ExecConfig(
+                                     obs=ObsConfig(enabled=True)))
     ws_b = Workspace.from_features(table_b, metric="euclidean")
     ws_env = Workspace.from_features(gradient, metric="euclidean")
 
@@ -144,6 +154,23 @@ def main(n: int = 2048, permutations: int = 999):
     builds = {a: ws.cache.build_count(a) for a in sorted(families)}
     print(f"== analysis complete — hoists built once each: {builds}, "
           f"cache hits: {sum(ws.cache.hits.values())} ==")
+
+    # -- the observability readout: where the time and the bytes went ----
+    # (the same data ws.report() serializes as a RunReport JSON document)
+    print("\n== span tree (primary session; wall seconds) ==")
+    for line in ws.obs.tracer.tree_lines():
+        print("  " + line)
+    report = ws.report(meta={"example": "community_analysis"})
+    led = report.ledger
+    print(f"== analytic traffic ledger: {led['hoist_passes']:.1f} n²-pass "
+          f"equivalents of hoist traffic, {led['total_bytes'] / 1e6:.1f} MB "
+          f"total analytic ==")
+    for op, v in sorted(led["by_op"].items()):
+        print(f"   {op:22s} {v['bytes'] / 1e6:10.2f} MB  x{v['count']}")
+    print(f"== recompile window: "
+          f"{ {k: v['programs'] for k, v in report.compile.items()} } "
+          f"(one kernels.permute_reduce program per invariant-stack "
+          f"shape, whatever K) ==")
     return r
 
 

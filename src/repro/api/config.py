@@ -15,8 +15,9 @@ so it can sit inside jitted pytrees or static args: two configs compare
 equal iff every knob matches, and each distinct config keys its own jit
 cache entry.
 
-This module deliberately imports nothing from ``repro`` so any layer —
-core, stats, kernels — can import it without cycles.
+This module deliberately imports nothing from ``repro`` except
+``repro.obs.config`` (itself import-free) so any layer — core, stats,
+kernels — can import it without cycles.
 """
 
 from __future__ import annotations
@@ -26,6 +27,8 @@ from functools import partial
 from typing import Any, Optional
 
 import jax
+
+from repro.obs.config import ObsConfig
 
 
 # mirror of repro.dist.METRICS — kept literal here because this module
@@ -38,7 +41,8 @@ _KNOWN_METRICS = ("braycurtis", "canberra", "cityblock", "euclidean",
          data_fields=[],
          meta_fields=["matvec_impl", "centering_impl", "materialize",
                       "interpret", "block", "batch_size", "kernel", "mesh",
-                      "device", "metric", "pairwise_impl", "feature_block"])
+                      "device", "metric", "pairwise_impl", "feature_block",
+                      "obs"])
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
     """Execution configuration shared by every analysis entry point.
@@ -99,6 +103,14 @@ class ExecConfig:
     feature_block:
         Feature-axis chunk of the pairwise metric reduce: bounds the
         per-tile broadcast term at (rows, cols, feature_block).
+    obs:
+        Observability switchboard (``repro.obs.ObsConfig``). The default
+        (``enabled=False``) is the zero-overhead contract: no session is
+        created, every span/charge resolves to the shared no-op
+        singletons. ``ObsConfig(enabled=True)`` makes the Workspace own
+        an ``ObsSession`` — span tracer + analytic traffic ledger +
+        recompile-sentinel window — readable via ``Workspace.report()``.
+        ``None`` coerces to the disabled default.
     """
 
     matvec_impl: str = "xla"
@@ -113,8 +125,14 @@ class ExecConfig:
     metric: str = "braycurtis"
     pairwise_impl: str = "xla"
     feature_block: int = 128
+    obs: Optional[ObsConfig] = ObsConfig()
 
     def __post_init__(self):
+        if self.obs is None:
+            object.__setattr__(self, "obs", ObsConfig())
+        if not isinstance(self.obs, ObsConfig):
+            raise ValueError(f"obs must be an ObsConfig (or None), "
+                             f"got {self.obs!r}")
         if self.matvec_impl not in ("xla", "pallas"):
             raise ValueError(f"unknown matvec_impl {self.matvec_impl!r}")
         if self.centering_impl not in ("ref", "fused", "distributed"):

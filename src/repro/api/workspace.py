@@ -64,6 +64,9 @@ from repro.core.pcoa import pcoa as _pcoa
 from repro.core.pcoa import resolve_dimensions
 from repro.core.validation import ensure_finite
 from repro.dist import get_metric, pairwise_condensed
+from repro.obs.ledger import FEATURE_HOIST_PASSES, HOIST_PASSES
+from repro.obs.report import ObsSession, RunReport, build_report
+from repro.obs.trace import NULL_OBS
 from repro.stats import engine
 from repro.stats.anosim import AnosimStatistic, rank_transform_condensed
 from repro.stats.engine import PermutationTestResult, as_key
@@ -83,12 +86,31 @@ class HoistCache:
     "ranks", "moments") or tuples whose first element is the artifact
     name (("coords", k, method, key-fingerprint)). ``misses[key]`` counts
     builds, ``hits[key]`` counts reuses.
+
+    When a Workspace binds its ``ObsSession`` (``bind_obs``), every miss
+    additionally runs under a ``hoist:<artifact>`` span and charges the
+    session's analytic traffic ledger from the audited pass registry
+    (``obs.ledger.HOIST_PASSES`` / ``FEATURE_HOIST_PASSES`` — the same
+    table ``benchmarks/bench_api.py`` accounts with, so a ``RunReport``'s
+    hoist totals reproduce the BENCH_api numbers live). Unbound caches
+    talk to the no-op singleton: zero overhead, identical counters.
     """
 
     def __init__(self):
         self._store = {}
         self.hits = Counter()
         self.misses = Counter()
+        self.obs = NULL_OBS
+        self.n = 0
+        self.pass_table = None
+
+    def bind_obs(self, obs, n: int, table=None) -> "HoistCache":
+        """Attach the observing session + the pass-table column (square-
+        vs feature-backed) that prices this cache's builds."""
+        self.obs = obs
+        self.n = n
+        self.pass_table = table
+        return self
 
     def get(self, key, build):
         """The cached value for ``key``, building (and counting a miss) on
@@ -97,7 +119,11 @@ class HoistCache:
             self.hits[key] += 1
         else:
             self.misses[key] += 1
-            self._store[key] = build()
+            art = key if isinstance(key, str) else key[0]
+            with self.obs.span(f"hoist:{art}", phase="hoist",
+                               key=str(key), n=self.n):
+                self._store[key] = build()
+            self.obs.charge_hoist(art, self.n, table=self.pass_table)
         return self._store[key]
 
     def counts(self, key) -> tuple:
@@ -154,6 +180,12 @@ class Workspace:
         self.config = config if config is not None else ExecConfig()
         self.generation = 0
         self.cache = HoistCache()
+        # the observability session rides the whole Workspace lifetime
+        # (spans accumulate across refresh() generations; each report
+        # records the generation it snapshot). Disabled -> the shared
+        # no-op singleton: every span/charge is a constant-time no-op.
+        self._obs = (ObsSession(self.config.obs)
+                     if self.config.obs.enabled else NULL_OBS)
         if features is not None:
             if dm is not None:
                 raise ValueError("pass a distance matrix OR a feature "
@@ -164,6 +196,7 @@ class Workspace:
                 raise ValueError("Workspace needs a distance matrix (or "
                                  "features= — see Workspace.from_features)")
             self._admit_dm(dm, validate)
+        self._bind_cache()
 
     @classmethod
     def from_features(cls, features, metric=None,
@@ -269,7 +302,39 @@ class Workspace:
             # feature-backed: the lazily-materialized square (if any) was
             # derived from the dropped production — it goes too
             self._dm = None
+        self._bind_cache()
         return self
+
+    def _bind_cache(self) -> None:
+        """Point the (fresh) HoistCache at the session's observability
+        state and the pass-table column matching the current backing."""
+        self.cache.bind_obs(
+            self._obs, self.n,
+            FEATURE_HOIST_PASSES if self._features is not None
+            else HOIST_PASSES)
+
+    # -- observability -------------------------------------------------------
+    @property
+    def obs(self):
+        """The session's ``ObsSession`` (or the shared no-op singleton
+        when ``config.obs.enabled`` is False)."""
+        return self._obs
+
+    def report(self, meta: Optional[dict] = None) -> RunReport:
+        """The session's ``RunReport``: span tree, analytic ledger
+        totals, HoistCache hit/miss counters, and the recompile
+        sentinel's trace/program deltas for this session's window. With
+        observability disabled the report still carries the always-on
+        telemetry (cache counters + the sentinel's process snapshot)
+        with empty spans and ledger."""
+        base = {"n": self.n, "generation": self.generation,
+                "backing": ("features" if self._features is not None
+                            else "distance_matrix"),
+                "obs_enabled": self._obs.enabled}
+        if meta:
+            base.update(meta)
+        return build_report(self._obs if self._obs.enabled else None,
+                            cache=self.cache, meta=base)
 
     # -- canonical views ----------------------------------------------------
     @property
@@ -300,11 +365,15 @@ class Workspace:
         construction."""
         if "condensed" in self.cache and "dist_means" in self.cache:
             return
-        prod = pairwise_condensed(
-            self._features, self._metric, block=self.config.block,
-            feature_block=self.config.feature_block,
-            impl=self.config.pairwise_impl,
-            interpret=self.config.interpret)
+        with self._obs.span("ws.produce_distances", phase="production",
+                            n=self.n, d=int(self._features.shape[1]),
+                            metric=self._metric.name,
+                            impl=self.config.pairwise_impl):
+            prod = pairwise_condensed(
+                self._features, self._metric, block=self.config.block,
+                feature_block=self.config.feature_block,
+                impl=self.config.pairwise_impl,
+                interpret=self.config.interpret)
         self.cache.get("condensed", lambda: prod["condensed"])
         self.cache.get("dist_means", lambda: {
             k: prod[k] for k in ("row_means", "global_mean", "mean",
@@ -434,7 +503,9 @@ class Workspace:
                         proportion_explained=full.proportion_explained[:k],
                         method="eigh", key=None)
 
-        return self.cache.get(cache_key, build)
+        with self._obs.span("ws.pcoa", n=self.n, dimensions=k,
+                            method=method):
+            return self.cache.get(cache_key, build)
 
     def permanova(self, grouping, permutations: int = 999, key=None,
                   batch_size: Optional[int] = None) -> PermutationTestResult:
@@ -446,16 +517,19 @@ class Workspace:
         matrix is ever materialized (``config.materialize=True`` restores
         the materialized-gram baseline)."""
         codes, num_groups = self._codes(grouping)
-        if self._features is not None and not self.config.materialize:
-            stat = PermanovaOperatorStatistic(self.operator(), codes,
-                                              self.n, num_groups)
-        else:
-            stat = PermanovaStatistic(self.data, codes, self.n, num_groups,
-                                      pre={"g": self.gram()})
-        return engine.permutation_test(
-            stat, permutations, key, alternative="greater",
-            batch_size=self.config.resolve_batch_size(batch_size, 32),
-            config=self.config, method="permanova")
+        with self._obs.span("ws.permanova", n=self.n,
+                            permutations=permutations):
+            if self._features is not None and not self.config.materialize:
+                stat = PermanovaOperatorStatistic(self.operator(), codes,
+                                                  self.n, num_groups)
+            else:
+                stat = PermanovaStatistic(self.data, codes, self.n,
+                                          num_groups,
+                                          pre={"g": self.gram()})
+            return engine.permutation_test(
+                stat, permutations, key, alternative="greater",
+                batch_size=self.config.resolve_batch_size(batch_size, 32),
+                config=self.config, method="permanova")
 
     def anosim(self, grouping, permutations: int = 999, key=None,
                batch_size: Optional[int] = None) -> PermutationTestResult:
@@ -467,14 +541,17 @@ class Workspace:
         statistic's ``dm`` field is only consumed when no pre-hoisted
         ranks are supplied — it rides in as None here)."""
         codes, num_groups = self._codes(grouping)
-        stat = AnosimStatistic(None, codes, self.n, num_groups,
-                               pre=self.ranks(),
-                               kernel=self.config.kernel,
-                               interpret=self.config.interpret)
-        return engine.permutation_test(
-            stat, permutations, key, alternative="greater",
-            batch_size=self.config.resolve_batch_size(batch_size, 32),
-            config=self.config, method="anosim")
+        with self._obs.span("ws.anosim", n=self.n,
+                            permutations=permutations,
+                            kernel=self.config.kernel):
+            stat = AnosimStatistic(None, codes, self.n, num_groups,
+                                   pre=self.ranks(),
+                                   kernel=self.config.kernel,
+                                   interpret=self.config.interpret)
+            return engine.permutation_test(
+                stat, permutations, key, alternative="greater",
+                batch_size=self.config.resolve_batch_size(batch_size, 32),
+                config=self.config, method="anosim")
 
     def permdisp(self, grouping, permutations: int = 999, key=None,
                  dimensions: Optional[int] = None, method: str = "fsvd",
@@ -486,12 +563,14 @@ class Workspace:
         once per session."""
         codes, num_groups = self._codes(grouping)
         dims = resolve_dimensions(dimensions, self.n)
-        coords = self.pcoa(dimensions=dims, method=method).coordinates
-        stat = PermdispStatistic(coords, codes, self.n, num_groups)
-        return engine.permutation_test(
-            stat, permutations, key, alternative="greater",
-            batch_size=self.config.resolve_batch_size(batch_size, 32),
-            config=self.config, method="permdisp")
+        with self._obs.span("ws.permdisp", n=self.n,
+                            permutations=permutations, dimensions=dims):
+            coords = self.pcoa(dimensions=dims, method=method).coordinates
+            stat = PermdispStatistic(coords, codes, self.n, num_groups)
+            return engine.permutation_test(
+                stat, permutations, key, alternative="greater",
+                batch_size=self.config.resolve_batch_size(batch_size, 32),
+                config=self.config, method="permdisp")
 
     def mantel(self, other, permutations: int = 999, key=None,
                alternative: str = "two-sided",
@@ -507,15 +586,18 @@ class Workspace:
         other = self._coerce(other)
         if other.n != self.n:
             raise ValueError("x and y must have the same shape")
-        pre = {"normxm": self.moments()["norm"],
-               "ynorm": other.moments()["hat"]}
-        stat = MantelStatistic(self.condensed(), None, self.n, pre=pre,
-                               kernel=self.config.kernel,
-                               interpret=self.config.interpret)
-        return engine.permutation_test(
-            stat, permutations, key, alternative=alternative,
-            batch_size=self.config.resolve_batch_size(batch_size, 32),
-            config=self.config, method="mantel")
+        with self._obs.span("ws.mantel", n=self.n,
+                            permutations=permutations,
+                            kernel=self.config.kernel):
+            pre = {"normxm": self.moments()["norm"],
+                   "ynorm": other.moments()["hat"]}
+            stat = MantelStatistic(self.condensed(), None, self.n, pre=pre,
+                                   kernel=self.config.kernel,
+                                   interpret=self.config.interpret)
+            return engine.permutation_test(
+                stat, permutations, key, alternative=alternative,
+                batch_size=self.config.resolve_batch_size(batch_size, 32),
+                config=self.config, method="mantel")
 
     def partial_mantel(self, other, control, permutations: int = 999,
                        key=None, alternative: str = "two-sided",
@@ -529,6 +611,17 @@ class Workspace:
         y, z = self._coerce(other), self._coerce(control)
         if not (self.n == y.n == z.n):
             raise ValueError("x, y and z must have the same shape")
+        span = self._obs.span("ws.partial_mantel", n=self.n,
+                              permutations=permutations,
+                              kernel=self.config.kernel).begin()
+        try:
+            return self._partial_mantel_body(
+                y, z, permutations, key, alternative, batch_size)
+        finally:
+            span.end()
+
+    def _partial_mantel_body(self, y, z, permutations, key, alternative,
+                             batch_size) -> PermutationTestResult:
         ym, zm = y.moments(), z.moments()
         r_yz = jnp.dot(ym["hat"], zm["hat"])
         # eager degeneracy check (can't raise inside the jitted engine):

@@ -52,6 +52,8 @@ from repro.core import centering
 from repro.core.distance_matrix import DistanceMatrix
 from repro.core.operators import (CenteredGramOperator,
                                   centered_gram_matvec_distributed)
+from repro.obs.compile import note_trace
+from repro.obs.trace import current_obs
 
 # Legacy name for the unified ordination result (same class; the api
 # redesign moved it to repro.api.results and added the recorded RNG key).
@@ -109,6 +111,7 @@ def _randomized_eigh_matfree(op: CenteredGramOperator, key, k: int,
     """Matrix-free fsvd: the operator pytree crosses the jit boundary with
     its tiling metadata static, so repeated solves of one shape reuse the
     executable."""
+    note_trace("pcoa.fsvd_matfree", (op.n, k, oversample, power_iters))
     return _subspace_iteration(op.matvec, op.n, op.dtype, key, k,
                                oversample, power_iters)
 
@@ -117,12 +120,15 @@ def _randomized_eigh_matfree(op: CenteredGramOperator, key, k: int,
 def _randomized_eigh(a: jax.Array, key, k: int, oversample: int = 10,
                      power_iters: int = 2):
     """Materialized fsvd — the baseline the benchmarks race against."""
+    note_trace("pcoa.fsvd_materialized",
+               (a.shape[0], k, oversample, power_iters))
     return _subspace_iteration(lambda x: a @ x, a.shape[0], a.dtype, key, k,
                                oversample, power_iters)
 
 
 @partial(jax.jit, static_argnames=("k",))
 def _exact_eigh(a: jax.Array, k: int):
+    note_trace("pcoa.eigh", (a.shape[0], k))
     evals, evecs = jnp.linalg.eigh(a)
     order = jnp.argsort(-evals)[:k]
     return evals[order], evecs[:, order]
@@ -228,13 +234,17 @@ def pcoa(dm: Optional[DistanceMatrix], dimensions: int = 10,
         n = operator.n
     k = resolve_dimensions(dimensions, n)
 
-    if method == "eigh":
-        centered = _gram(dm.data)
-        evals, evecs = _exact_eigh(centered, k)
-        total = jnp.trace(centered)          # exact: the matrix exists
-        key = None                           # deterministic — no RNG used
-    elif method == "fsvd":
-        if cfg.materialize:
+    if method not in ("eigh", "fsvd"):
+        raise ValueError(f"unknown method {method!r}")
+    with current_obs().span(f"pcoa.{method}", phase="solve", n=n, k=k,
+                            materialize=cfg.materialize,
+                            impl=cfg.matvec_impl):
+        if method == "eigh":
+            centered = _gram(dm.data)
+            evals, evecs = _exact_eigh(centered, k)
+            total = jnp.trace(centered)      # exact: the matrix exists
+            key = None                       # deterministic — no RNG used
+        elif cfg.materialize:
             centered = _gram(dm.data)
             evals, evecs = _randomized_eigh(centered, key, k)
             total = jnp.trace(centered)
@@ -254,8 +264,6 @@ def pcoa(dm: Optional[DistanceMatrix], dimensions: int = 10,
                     interpret=cfg.interpret)
             evals, evecs = _randomized_eigh_matfree(op, key, k)
             total = op.trace()
-    else:
-        raise ValueError(f"unknown method {method!r}")
 
     pos = jnp.maximum(evals, 0.0)
     coordinates = evecs * jnp.sqrt(pos)[None, :]

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.metrics import Metric, get_metric, merge_acc
+from repro.obs.compile import note_trace
+from repro.obs.trace import current_obs
 
 _DEFAULT_BLOCK = 256
 _DEFAULT_FEATURE_BLOCK = 128
@@ -89,6 +91,8 @@ def _panel_stats(xi: jax.Array, x: jax.Array, *, metric: Metric,
 
     The row sums ride the same jit region as the strip compute, so XLA
     fuses them into the panel sweep — the hoists cost no extra pass."""
+    note_trace("dist.panel_stats",
+               (xi.shape, x.shape, metric.name, feature_block, impl, block))
     if impl == "pallas":
         from repro.kernels.pairwise_ops import pairwise_panel_pallas
         strip = pairwise_panel_pallas(xi, x, metric=metric, block_n=block,
@@ -128,23 +132,29 @@ def pairwise_condensed(x, metric="braycurtis", *,
     if x.dtype != jnp.float32:
         x = x.astype(jnp.float32)
     n = x.shape[0]
+    d = int(x.shape[1])
     b = max(min(block, n), 1)
+    obs = current_obs()          # the ambient session (NULL_OBS when none)
 
     cond_parts, rs1_parts, rs2_parts = [], [], []
-    for i0 in range(0, n, b):
-        i1 = min(i0 + b, n)
-        xi = x[i0:i1]
-        if i1 - i0 < b:                     # pad the short tail panel so
-            xi = jnp.pad(xi, ((0, b - (i1 - i0)), (0, 0)))  # one trace fits all
-        strip, rs1, rs2 = _panel_stats(xi, x, metric=metric,
-                                       feature_block=feature_block,
-                                       impl=impl, interpret=interpret,
-                                       block=b)
-        rs1_parts.append(rs1[:i1 - i0])
-        rs2_parts.append(rs2[:i1 - i0])
-        idx = _panel_condensed_indices(n, i0, i1)
-        if idx.size:
-            cond_parts.append(strip.reshape(-1)[jnp.asarray(idx)])
+    with obs.span("dist.pairwise_condensed", phase="production", n=n, d=d,
+                  block=b, impl=impl, metric=metric.name,
+                  panels=-(-n // b)):
+        for i0 in range(0, n, b):
+            i1 = min(i0 + b, n)
+            xi = x[i0:i1]
+            if i1 - i0 < b:                 # pad the short tail panel so
+                xi = jnp.pad(xi, ((0, b - (i1 - i0)), (0, 0)))  # one trace fits all
+            strip, rs1, rs2 = _panel_stats(xi, x, metric=metric,
+                                           feature_block=feature_block,
+                                           impl=impl, interpret=interpret,
+                                           block=b)
+            rs1_parts.append(rs1[:i1 - i0])
+            rs2_parts.append(rs2[:i1 - i0])
+            idx = _panel_condensed_indices(n, i0, i1)
+            if idx.size:
+                cond_parts.append(strip.reshape(-1)[jnp.asarray(idx)])
+    obs.charge_production(n, d, b, metric=metric.name, impl=impl)
 
     rowsum_d = jnp.concatenate(rs1_parts)
     rowsum_d2 = jnp.concatenate(rs2_parts)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.center_matvec import center_matvec
+from repro.obs.compile import note_trace
 
 _DEFAULT_BLOCK = 512
 
@@ -51,6 +52,8 @@ def center_matvec_pallas(d: jax.Array, x: jax.Array, row_means: jax.Array,
     """
     interpret = resolve_interpret(interpret)
     n, k = d.shape[0], x.shape[1]
+    note_trace("kernels.center_matvec",
+               (n, k, block_m, block_n, interpret))
     # TPU-native tiles need lane-aligned columns; the interpreter is free
     lane_n = 8 if interpret else 128
     floor_n = 1 if interpret else lane_n

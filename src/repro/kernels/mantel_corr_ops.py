@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.kernels.center_matvec_ops import pick_block, resolve_interpret
 from repro.kernels.mantel_corr import mantel_corr
+from repro.obs.compile import note_trace
 
 _DEFAULT_BLOCK = 256
 
@@ -40,6 +41,8 @@ def mantel_corr_pallas(x: jax.Array, y: jax.Array, orders: jax.Array,
     interpret = resolve_interpret(interpret)
     n = x.shape[0]
     k_perms = orders.shape[0]
+    note_trace("kernels.mantel_corr",
+               (n, k_perms, perm_batch, block, interpret))
     iu = np.triu_indices(n, k=1)
 
     # --- hoisted permutation-invariant statistics (the paper's tricks) ---

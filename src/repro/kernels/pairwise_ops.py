@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.dist.metrics import Metric
 from repro.kernels.center_matvec_ops import pick_block, resolve_interpret
 from repro.kernels.pairwise import pairwise_panel
+from repro.obs.compile import note_trace
 
 _DEFAULT_BLOCK = 256
 _DEFAULT_FEATURE_BLOCK = 128
@@ -39,6 +40,9 @@ def pairwise_panel_pallas(xi: jax.Array, x: jax.Array, *, metric: Metric,
     """
     interpret = resolve_interpret(interpret)
     n, d = x.shape
+    note_trace("kernels.pairwise_panel",
+               (tuple(xi.shape), n, d, metric.name, block_n, feature_block,
+                interpret))
     # TPU-native tiles need lane-aligned (multiple-of-128) trailing dims
     lane = 8 if interpret else 128
     floor = 1 if interpret else lane

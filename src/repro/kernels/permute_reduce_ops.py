@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.permute_reduce import permute_reduce_kernel
+from repro.obs.compile import note_trace
 
 # condensed chunk streamed per grid step. 64k floats = 256 KiB per ys row:
 # big enough that the (B, chunk) gather tile amortizes loop overhead,
@@ -105,6 +106,11 @@ def permute_reduce(xc: jax.Array, ys: jax.Array, orders: jax.Array,
                          f"got {xc.shape}")
     if ys.ndim != 2 or ys.shape[1] != m:
         raise ValueError(f"ys must be (S, {m}), got {ys.shape}")
+    # trace-time only: THE padded per_batch kernel entry — one program
+    # per (n, B, S, impl, chunk) whatever K the engine runs (nested-jit
+    # bodies trace once per distinct avals even across outer retraces)
+    note_trace("kernels.permute_reduce",
+               (n, b_perms, ys.shape[0], impl, chunk, interpret))
     if m == 0:                                     # n < 2: empty triangle
         return jnp.zeros((ys.shape[0], b_perms), dtype=xc.dtype)
 

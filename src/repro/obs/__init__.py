@@ -1,0 +1,40 @@
+"""repro.obs — always-on observability for the analysis stack.
+
+Four pieces, one discipline ("profile first, then trust the model" —
+the SSD-profiling study's rule, applied to our own runtime):
+
+* ``obs.trace``   — nested span tracer with phase tags
+  (hoist | per_perm | production | solve | step), JSON + Chrome
+  ``trace_event`` export, optional ``jax.profiler.TraceAnnotation``
+  bridge, and a zero-overhead no-op fast path when disabled;
+* ``obs.ledger``  — THE audited analytic-traffic registry (hoist pass
+  tables, Mantel per-permutation models, production feature reads),
+  shared by the benchmarks and charged live by the instrumented stack;
+* ``obs.compile`` — the recompile sentinel: jit trace/program counts
+  per wrapped entry point, with a runtime guard for the "one trace
+  serves any K" invariant;
+* ``obs.report``  — ``ObsSession`` (one run's tracer+ledger+sentinel
+  window) and ``RunReport`` (the one-JSON-per-run artifact CI uploads).
+
+Enable per session via ``ExecConfig(obs=ObsConfig(enabled=True))``;
+read the result with ``Workspace.report()``.
+"""
+
+from repro.obs.compile import (CompileSentinel, RecompileError, note_trace,
+                               sentinel)
+from repro.obs.config import ObsConfig
+from repro.obs.ledger import (FEATURE_HOIST_PASSES, HOIST_PASSES, Ledger,
+                              LedgerEntry, hoist_floats, perm_traffic_floats,
+                              production_floats)
+from repro.obs.report import ObsSession, RunReport, build_report
+from repro.obs.trace import (NULL_OBS, NULL_SPAN, PHASES, Span, Tracer,
+                             current_obs)
+
+__all__ = [
+    "CompileSentinel", "RecompileError", "note_trace", "sentinel",
+    "ObsConfig",
+    "FEATURE_HOIST_PASSES", "HOIST_PASSES", "Ledger", "LedgerEntry",
+    "hoist_floats", "perm_traffic_floats", "production_floats",
+    "ObsSession", "RunReport", "build_report",
+    "NULL_OBS", "NULL_SPAN", "PHASES", "Span", "Tracer", "current_obs",
+]

@@ -1,0 +1,118 @@
+"""Recompile sentinel: count jit traces per wrapped entry point, live.
+
+The engine-hardening invariant of the padded ``per_batch`` path is "ONE
+trace serves any K" — the orders are padded to full batch tiles so the
+canonical 999-permutation run never traces a second trailing-block
+program. Until now that was only a test-time property (a Python-side
+counter inside a probe statistic); this module makes it an always-on
+runtime counter with an assertable guard, so CI's smoke pass — and any
+production session — fails loudly the day a shape leaks back into a
+trace signature.
+
+Mechanism: a jitted function's **Python body runs only at trace time**,
+so a ``note_trace(name, signature)`` call placed inside the body is a
+zero-cost-per-call trace counter (verified for nested jits too: an
+inner jit's body runs once per distinct signature even across outer
+retraces — jax caches the inner jaxpr by abstract values). Each note
+records:
+
+* ``traces``   — body executions: how many times jax traced this entry;
+* ``programs`` — distinct signatures: how many separate compiled
+  executables exist. A genuine recompile regression (e.g. the old
+  trailing-block special case) shows up as a NEW signature; a
+  legitimately different workload (another n, another batch size) does
+  too — which is exactly what the signature tuple is for: the guard
+  scopes to a window where the workload parameters that SHOULD be
+  shape-stable actually are.
+
+The sentinel is process-global because the jit caches it mirrors are
+process-global; scope assertions with ``snapshot()``/``since()`` or the
+``expect()`` context manager.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from collections import Counter
+from typing import Optional
+
+
+class RecompileError(RuntimeError):
+    """An entry point traced more distinct programs than its budget."""
+
+
+class CompileSentinel:
+    """Per-entry-point trace and program counters."""
+
+    def __init__(self):
+        self._traces: Counter = Counter()
+        self._signatures: dict = {}          # name -> set of signatures
+
+    # -- recording ---------------------------------------------------------
+    def note(self, name: str, signature=None) -> None:
+        """Record one trace of ``name`` (call from inside the jitted
+        body — it only runs at trace time). ``signature`` is any
+        hashable tuple of the shapes/statics that key the jit cache;
+        ``None`` degrades to trace counting only."""
+        self._traces[name] += 1
+        if signature is not None:
+            self._signatures.setdefault(name, set()).add(signature)
+
+    # -- queries -----------------------------------------------------------
+    def traces(self, name: str) -> int:
+        return self._traces[name]
+
+    def programs(self, name: str) -> int:
+        return len(self._signatures.get(name, ()))
+
+    def names(self):
+        return sorted(set(self._traces) | set(self._signatures))
+
+    def snapshot(self) -> dict:
+        """{entry point: {"traces", "programs"}} — embed in a RunReport
+        or diff later with ``since()``."""
+        return {n: {"traces": self.traces(n), "programs": self.programs(n)}
+                for n in self.names()}
+
+    def since(self, snap: dict) -> dict:
+        """Counter deltas vs an earlier ``snapshot()`` (entries with no
+        new traces are omitted)."""
+        out = {}
+        for n in self.names():
+            base = snap.get(n, {"traces": 0, "programs": 0})
+            dt = self.traces(n) - base["traces"]
+            dp = self.programs(n) - base["programs"]
+            if dt or dp:
+                out[n] = {"traces": dt, "programs": dp}
+        return out
+
+    # -- guards ------------------------------------------------------------
+    @contextlib.contextmanager
+    def expect(self, name: str, max_programs: int = 1,
+               max_traces: Optional[int] = None):
+        """Assert at runtime that the enclosed block traces ``name`` at
+        most ``max_programs`` distinct programs (the "one trace serves
+        any K" invariant: run two different K values inside the window
+        and the padded path must not add a second program)."""
+        base = self.snapshot()
+        yield self
+        delta = self.since(base).get(name, {"traces": 0, "programs": 0})
+        if delta["programs"] > max_programs:
+            raise RecompileError(
+                f"{name}: {delta['programs']} distinct programs traced "
+                f"in this window (budget: {max_programs}) — a shape or "
+                f"static argument is leaking into the trace signature")
+        if max_traces is not None and delta["traces"] > max_traces:
+            raise RecompileError(
+                f"{name}: {delta['traces']} traces in this window "
+                f"(budget: {max_traces})")
+
+
+#: THE process-global sentinel — jit caches are process-global, so their
+#: mirror is too. Sessions embed ``snapshot()`` deltas in their reports.
+sentinel = CompileSentinel()
+
+
+def note_trace(name: str, signature=None) -> None:
+    """Module-level shorthand the instrumented jit bodies call."""
+    sentinel.note(name, signature)

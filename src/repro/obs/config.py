@@ -1,0 +1,60 @@
+"""ObsConfig: the observability switchboard carried by ``ExecConfig``.
+
+A frozen, hashable dataclass — it rides inside ``api.ExecConfig`` (a
+leaf-free pytree whose every field is static jit metadata), so it must
+compare/hash by value and never hold mutable state. The mutable side of
+observability (the span list, the ledger entries) lives in
+``obs.report.ObsSession``, which a ``Workspace`` constructs FROM this
+config; the config only says what to collect.
+
+``enabled=False`` (the default) is the zero-overhead contract: a
+Workspace built with it never constructs a session — every ``span()``
+call resolves to the shared no-op singleton (``obs.trace.NULL_SPAN``)
+and every ledger charge is a no-op method on ``obs.trace.NULL_OBS``.
+The recompile sentinel (``obs.compile``) is the one always-on piece:
+it only runs at jit-trace time, so it costs nothing per call.
+
+This module deliberately imports nothing from ``repro`` (and nothing
+heavier than ``dataclasses``) so ``api.config`` can import it without
+cycles or import-time cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """What the observability layer collects for one session.
+
+    Fields
+    ------
+    enabled:
+        Master switch. ``False`` (default): no session is created, every
+        span/charge resolves to the no-op fast path — measured session
+        overhead is the cost of one attribute lookup per call site.
+    spans:
+        Collect the nested wall-time span tree (``obs.trace.Tracer``).
+    ledger:
+        Charge the analytic traffic ledger (``obs.ledger.Ledger``) at the
+        instrumented call sites — hoist builds, permutation batches, the
+        distance production sweep.
+    annotate_xla:
+        Bridge each span into ``jax.profiler.TraceAnnotation`` so spans
+        line up inside XLA profiles (Perfetto / TensorBoard). Off by
+        default: it adds a profiler call per span even when no profile
+        is being taken.
+    """
+
+    enabled: bool = False
+    spans: bool = True
+    ledger: bool = True
+    annotate_xla: bool = False
+
+    def __post_init__(self):
+        for f in ("enabled", "spans", "ledger", "annotate_xla"):
+            v = getattr(self, f)
+            if not isinstance(v, bool):
+                raise ValueError(f"ObsConfig.{f} must be a bool, "
+                                 f"got {v!r}")

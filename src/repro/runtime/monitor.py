@@ -12,6 +12,13 @@ monitor implements the detection half that any TPU-pod runner needs:
   (the eviction itself is the cluster scheduler's job);
 * per-step records exportable for the roofline/§Perf logs.
 
+Since the ``repro.obs`` subsystem the monitor is refolded on the span
+stream: every step is a ``phase="step"`` span on an ``obs.trace.Tracer``
+(the monitor's own by default, or a shared session tracer passed in),
+so step timings ride the same export surface as the analysis spans —
+JSON, Chrome ``trace_event``, ``Tracer.total("step")`` — and the
+``StepRecord`` view is derived from the spans, not stored beside them.
+
 tests/test_runtime.py injects synthetic delays to verify flagging.
 """
 
@@ -19,8 +26,9 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
-import time
 from typing import List, Optional
+
+from repro.obs.trace import Span, Tracer
 
 
 @dataclasses.dataclass
@@ -31,36 +39,62 @@ class StepRecord:
 
 
 class StepMonitor:
+    """Step timer + straggler flagger over a span stream.
+
+    ``tracer`` defaults to a private ``Tracer``; pass a session's tracer
+    (e.g. ``workspace.obs.tracer``) to interleave step spans with the
+    analysis spans in one exported timeline.
+    """
+
     def __init__(self, k: float = 3.0, warmup: int = 3,
-                 deadline_factor: float = 10.0):
+                 deadline_factor: float = 10.0,
+                 tracer: Optional[Tracer] = None):
         self.k = k
         self.warmup = warmup
         self.deadline_factor = deadline_factor
-        self.records: List[StepRecord] = []
-        self._t0: Optional[float] = None
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._spans: List[Span] = []         # this monitor's step spans
+        self._open: Optional[Span] = None
 
     # -- timing ---------------------------------------------------------
     def start(self):
-        self._t0 = time.perf_counter()
+        self._open = self.tracer.span("step", phase="step").begin()
 
     def stop(self, step: int) -> StepRecord:
-        dt = time.perf_counter() - self._t0
-        return self.record(step, dt)
+        if self._open is None:
+            raise RuntimeError(
+                "StepMonitor.stop() called before start() — call start() "
+                "at the top of the step (or use record(step, seconds) "
+                "for pre-measured durations)")
+        span = self._open.end()
+        self._open = None
+        return self._flag(span, step)
 
     def record(self, step: int, seconds: float) -> StepRecord:
-        flagged = False
-        base = [r.seconds for r in self.records if not r.straggler]
-        if len(base) >= self.warmup:
-            med = statistics.median(base)
-            flagged = seconds > self.k * med
-        rec = StepRecord(step, seconds, flagged)
-        self.records.append(rec)
-        return rec
+        """Append a pre-measured step (the caller timed it itself)."""
+        return self._flag(
+            self.tracer.record("step", seconds, phase="step"), step)
+
+    def _flag(self, span: Span, step: int) -> StepRecord:
+        base = [s.duration for s in self._spans
+                if not s.attrs.get("straggler")]
+        flagged = (len(base) >= self.warmup
+                   and span.duration > self.k * statistics.median(base))
+        span.add(step=step, straggler=flagged)
+        self._spans.append(span)
+        return StepRecord(step, span.duration, flagged)
 
     # -- queries ----------------------------------------------------------
     @property
+    def records(self) -> List[StepRecord]:
+        """The span stream, viewed as StepRecords."""
+        return [StepRecord(s.attrs["step"], s.duration,
+                           s.attrs["straggler"]) for s in self._spans]
+
+    @property
     def median(self) -> float:
-        base = [r.seconds for r in self.records if not r.straggler]
+        base = [s.duration for s in self._spans
+                if not s.attrs.get("straggler")]
         return statistics.median(base) if base else float("nan")
 
     def stragglers(self) -> List[StepRecord]:
@@ -78,7 +112,7 @@ class StepMonitor:
                 f"{self.deadline():.1f}s) — checkpoint and evict")
 
     def summary(self) -> dict:
-        secs = [r.seconds for r in self.records]
+        secs = [s.duration for s in self._spans]
         return {
             "steps": len(secs),
             "median_s": self.median,

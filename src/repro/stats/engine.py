@@ -46,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import ExecConfig
+from repro.obs.compile import note_trace
+from repro.obs.trace import current_obs
 
 try:                                    # jax >= 0.6 exports it at top level
     _shard_map = jax.shard_map
@@ -172,6 +174,10 @@ def _null_distribution(stat, key, permutations: int, batch_size: int):
     group count, …) keys the jit cache, so repeated tests of the same
     shape reuse the compiled executable.
     """
+    # trace-time only (a jitted body runs once per distinct signature):
+    # the sentinel's count of engine programs, free at execution time
+    note_trace("stats.engine.null_distribution",
+               (type(stat).__name__, stat.n, permutations, batch_size))
     invariants = stat.hoist()                      # runs exactly once
     observed = stat.per_perm(invariants, jnp.arange(stat.n))
 
@@ -186,6 +192,11 @@ def _null_distribution(stat, key, permutations: int, batch_size: int):
         # special case traced a SECOND jit program whenever batch_size
         # didn't divide K (the canonical 999 vs batch 32) — same math,
         # double the compile time and cache footprint.
+        # K is deliberately NOT in this signature: the padded path's
+        # contract is that programs stays 1 across every K at fixed
+        # (statistic, n, B) — the sentinel makes that assertable
+        note_trace("stats.engine.per_batch",
+                   (type(stat).__name__, stat.n, batch_size))
         num_tiles = -(-permutations // batch_size)
         total = num_tiles * batch_size
         if total != permutations:
@@ -216,7 +227,18 @@ def permutation_test(stat: Statistic, permutations: int = 999,
         raise ValueError(f"unknown alternative {alternative!r}")
     key = as_key(key)
     bs = (config or ExecConfig()).resolve_batch_size(batch_size, 8)
-    observed, permuted = _null_distribution(stat, key, permutations, bs)
+    obs = current_obs()          # the ambient session (NULL_OBS when none)
+    batched = getattr(stat, "per_batch", None) is not None
+    tiles = -(-permutations // bs) if permutations else 0
+    with obs.span(f"engine.{method or type(stat).__name__}",
+                  phase="per_perm", n=stat.n, permutations=permutations,
+                  batch_size=bs, tiles=tiles, batched=batched):
+        observed, permuted = _null_distribution(stat, key, permutations, bs)
+    if batched and permutations:
+        # the batched loop IS the condensed_fused traffic model — the
+        # padded tail rows are real gathers, so they are charged too
+        obs.charge_perm_batch(method or type(stat).__name__, stat.n,
+                              tiles * bs, bs)
     return finish(observed, permuted, permutations, alternative, stat.n,
                   method=method, key=key)
 

@@ -315,3 +315,67 @@ def test_resolve_dimensions_rule():
     for bad in (0, -1):
         with pytest.raises(ValueError):
             resolve_dimensions(bad, 10)
+
+
+def test_hoist_counters_across_refresh_generations():
+    """refresh() drops every artifact WITH fresh counters: the next
+    analysis re-runs each hoist exactly once, and the generation-0
+    tallies don't leak into the generation-1 cache."""
+    dm, g = _dm(11), _grouping()
+    ws = Workspace(dm)
+    ws.permanova(g, permutations=19, key=KEY)
+    ws.permanova(g, permutations=19, key=KEY)
+    gen0 = ws.cache
+    assert ws.generation == 0
+    assert gen0.counts("gram") == (1, 1)             # one build, one reuse
+
+    ws.refresh()
+    assert ws.generation == 1
+    assert ws.cache is not gen0                      # a NEW cache object
+    assert len(ws.cache) == 0
+    assert ws.cache.counts("gram") == (0, 0)         # counters start clean
+    assert gen0.counts("gram") == (1, 1)             # old tallies untouched
+
+    r0 = ws.permanova(g, permutations=19, key=KEY)
+    r1 = ws.permanova(g, permutations=19, key=KEY)
+    assert ws.cache.counts("gram") == (1, 1)         # hoisted exactly once
+    assert r0.statistic == r1.statistic
+
+    # re-admitting NEW data through refresh() also restarts the tallies
+    ws.refresh(dm=_dm(12))
+    assert ws.generation == 2 and ws.cache.counts("gram") == (0, 0)
+    ws.permanova(g, permutations=19, key=KEY)
+    assert ws.cache.counts("gram") == (0, 1)
+
+
+def test_eigh_coords_slice_hit_path_exact_counts():
+    """A lower-k eigh request is served by SLICING a cached higher-k
+    solution: exactly one hit on the higher-k entry, a slice-only build
+    of the lower-k entry (the gram/solve pipeline does NOT re-run), and
+    the sliced coordinates are bitwise the higher-k solution's prefix."""
+    ws = Workspace(_dm(13))
+    full = ws.pcoa(dimensions=8, method="eigh")
+    k8 = ("coords", 8, "eigh", None)
+    assert ws.cache.counts(k8) == (0, 1)
+    assert ws.cache.counts("gram") == (0, 1)         # eigh's one solve
+
+    low = ws.pcoa(dimensions=3, method="eigh")
+    k3 = ("coords", 3, "eigh", None)
+    assert ws.cache.counts(k8) == (1, 1)             # slice source: a HIT
+    assert ws.cache.counts(k3) == (0, 1)             # the slice build
+    assert ws.cache.counts("gram") == (0, 1)         # and NO re-solve
+    np.testing.assert_array_equal(np.asarray(low.coordinates),
+                                  np.asarray(full.coordinates)[:, :3])
+    np.testing.assert_array_equal(np.asarray(low.eigenvalues),
+                                  np.asarray(full.eigenvalues)[:3])
+
+    # the sliced entry is itself cached: ask again, nothing builds
+    ws.pcoa(dimensions=3, method="eigh")
+    assert ws.cache.counts(k3) == (1, 1)
+    assert ws.cache.counts(k8) == (1, 1)             # not consulted again
+
+    # slicing picks the SMALLEST covering solution once several exist
+    ws.pcoa(dimensions=12, method="eigh")            # k=12 solve (miss)
+    ws.pcoa(dimensions=6, method="eigh")             # 6 ≤ 8 < 12 -> from k8
+    assert ws.cache.counts(k8) == (2, 1)
+    assert ws.cache.counts(("coords", 12, "eigh", None)) == (0, 1)

@@ -134,6 +134,48 @@ def test_monitor_deadline():
     m.check_deadline(0.3)     # under deadline: fine
 
 
+def test_monitor_deadline_unbounded_until_first_step():
+    # no completed steps -> no median -> the watchdog must not fire
+    m = StepMonitor(deadline_factor=5.0)
+    assert m.deadline() == float("inf")
+    m.check_deadline(1e9)
+
+
+def test_monitor_stop_before_start_is_a_clear_error():
+    m = StepMonitor()
+    with pytest.raises(RuntimeError, match="before start"):
+        m.stop(0)
+    # and the failed stop leaves the monitor usable
+    m.start()
+    rec = m.stop(0)
+    assert rec.seconds >= 0.0 and not rec.straggler
+
+
+def test_monitor_live_start_stop_records_spans():
+    m = StepMonitor(k=3.0, warmup=1)
+    for i in range(3):
+        m.start()
+        m.stop(i)
+    assert [r.step for r in m.records] == [0, 1, 2]
+    # refolded on the span stream: each step is a phase="step" span on
+    # the monitor's tracer, visible to the obs export surface
+    assert m.tracer.count("step") == 3
+    assert m.tracer.total("step") == pytest.approx(
+        sum(r.seconds for r in m.records))
+
+
+def test_monitor_shares_a_session_tracer():
+    from repro.obs.trace import Tracer
+    t = Tracer()
+    m = StepMonitor(tracer=t)
+    m.record(0, 0.25)
+    (span,) = t.spans
+    assert span.phase == "step" and span.attrs["step"] == 0
+    assert span.duration == pytest.approx(0.25)
+    # the span export carries the straggler flag the monitor computed
+    assert span.attrs["straggler"] is False
+
+
 # --------------------------------------------------------------------------
 # optimizer
 # --------------------------------------------------------------------------
