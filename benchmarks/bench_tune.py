@@ -1,0 +1,113 @@
+"""--suite tune: modeled traffic of solver-chosen tiles vs the
+hand-picked constants, across every suite's workload.
+
+``PYTHONPATH=src python -m benchmarks.run --suite tune``
+
+The measured quantity is **analytic effective traffic** from the
+``repro.tune`` cost model (itself the audited ``obs.ledger`` registry —
+the same terms every other BENCH artifact accounts with). For each
+size the solver picks block / feature_block / batch / chunk against
+the backend budget, and both the solved and the default tiles are
+priced at their budget-clamped EFFECTIVE reuse — so the comparison is
+what each geometry actually realizes, not what its label promises.
+
+The gate (also run under ``--smoke``): the solved tiles never model
+MORE traffic than the hand-picked constants on any suite's workload —
+guaranteed by construction (the defaults are in the solver's candidate
+set) and asserted here so a solver regression cannot ship silently.
+
+Also writes the calibration profile (``tune_profile.json``): the
+two-point bandwidth/latency fit for this container, which CI uploads
+so later runs can ``ExecConfig(tune_profile=...)`` instead of
+re-probing.
+"""
+
+import json
+
+import jax
+
+from repro.tune import calibrate, detect_budget, save_profile, solve_tiles
+
+# which cost-model ops each BENCH suite's workload exercises, and which
+# backing (feature-backed workloads add the production sweep)
+_SUITE_OPS = {
+    "mantel": {"ops": ("perm_batch",), "feature_backed": False},
+    "stats": {"ops": ("perm_batch",), "feature_backed": False},
+    "pcoa": {"ops": ("matvec",), "feature_backed": False},
+    "api": {"ops": ("matvec", "perm_batch"), "feature_backed": False},
+    "dist": {"ops": ("production", "perm_batch", "matvec"),
+             "feature_backed": True},
+}
+
+
+def _price(tiles, op):
+    t = tiles.to_dict()
+    return (t["modeled"][op]["traffic_floats"],
+            t["modeled_default"][op]["traffic_floats"])
+
+
+def run(sizes=(2048, 4096), d=256, out_json="BENCH_tune.json",
+        profile_json="tune_profile.json"):
+    print(f"\n# --suite tune — solver-chosen tiles vs hand-picked "
+          f"constants (analytic effective traffic, d={d} feature-backed)")
+    budget = detect_budget()
+    results = {}
+    for n in sizes:
+        dm_tiles = solve_tiles(n, budget=budget)
+        ft_tiles = solve_tiles(n, d, budget=budget)
+        per_suite = {}
+        for suite, spec in _SUITE_OPS.items():
+            tiles = ft_tiles if spec["feature_backed"] else dm_tiles
+            ops = {}
+            for op in spec["ops"]:
+                tuned, default = _price(tiles, op)
+                # THE gate: solver tiles never model worse than the
+                # constants they replace, on any suite's workload
+                assert tuned <= default, (
+                    f"tune regression: {suite}/{op} at n={n}: solved "
+                    f"tiles model {tuned} floats vs default {default}")
+                ops[op] = {"tuned_floats": tuned, "default_floats": default,
+                           "ratio": default / tuned if tuned else 1.0}
+            per_suite[suite] = ops
+        results[n] = {
+            "tiles": {"dm": {k: getattr(dm_tiles, k) for k in
+                             ("block", "feature_block", "batch_size",
+                              "chunk")},
+                      "features": {k: getattr(ft_tiles, k) for k in
+                                   ("block", "feature_block", "batch_size",
+                                    "chunk")}},
+            "suites": per_suite,
+        }
+        worst = min(o["ratio"] for s in per_suite.values()
+                    for o in s.values())
+        best = max(o["ratio"] for s in per_suite.values()
+                   for o in s.values())
+        print(f"tune n={n:<6d} tiles(dm) block={dm_tiles.block:<5d}"
+              f" B={dm_tiles.batch_size:<4d} chunk={dm_tiles.chunk:<7d}"
+              f" -> tuned/default traffic ratios {1/best:.3f}..{1/worst:.3f}"
+              f" (<= 1 on all {len(per_suite)} suites)")
+
+    if profile_json:
+        prof = calibrate(budget)
+        save_profile(prof, profile_json)
+        print(f"# calibrated {prof.backend}: "
+              f"{prof.bandwidth / 1e9:.1f} GB/s, "
+              f"{prof.latency * 1e6:.1f} us -> {profile_json}")
+
+    if out_json:
+        artifact = {
+            "suite": "tune",
+            "d": d,
+            "budget": budget.to_dict(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "results": {str(n): r for n, r in results.items()},
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

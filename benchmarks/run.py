@@ -27,6 +27,11 @@ Suites:
     per-permutation bytes moved (square-gather loop vs condensed
     batch-fused, at n ∈ {2048, 4096}, K=999); writes BENCH_mantel.json.
     Acceptance gate: ≥ 8x less traffic than the square-gather loop.
+  tune — the repro.tune solver: modeled effective traffic of
+    solver-chosen tiles vs the hand-picked constants, across every
+    suite's workload at n ∈ {2048, 4096}; writes BENCH_tune.json plus
+    the container's calibration profile (tune_profile.json). Gate:
+    tuned never models worse than the constants.
 
 ``--smoke`` runs the dist + api + mantel suites at tiny sizes with NO
 BENCH artifact written — the CI guard that the benchmark entry points
@@ -46,7 +51,7 @@ import platform
 import jax
 
 from benchmarks import bench_api, bench_center, bench_dist, bench_mantel, \
-    bench_pcoa, bench_stats, bench_validation
+    bench_pcoa, bench_stats, bench_tune, bench_validation
 
 
 def _smoke_report(path: str) -> None:
@@ -106,12 +111,13 @@ def main() -> None:
                          "(uploaded by CI as a workflow artifact)")
     ap.add_argument("--suite", default="paper",
                     choices=("paper", "stats", "pcoa", "api", "dist",
-                             "mantel"),
+                             "mantel", "tune"),
                     help="paper tables (default), the repro.stats sweep, "
                          "the matrix-free ordination sweep, the hoist-once "
                          "Workspace session accounting, the fused "
-                         "feature-table distance production, or the "
-                         "condensed Mantel permutation-traffic accounting")
+                         "feature-table distance production, the "
+                         "condensed Mantel permutation-traffic accounting, "
+                         "or the repro.tune solved-vs-default tile pricing")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -126,10 +132,31 @@ def main() -> None:
         bench_api.run(sizes=(128,), permutations=49, out_json=None)
         bench_mantel.run_suite(sizes=(64,), permutations=19, batch=8,
                                out_json=None)
+        # the tune gate: solver tiles never price worse than the
+        # hand-picked constants in the analytic model (asserted inside)
+        bench_tune.run(sizes=(64, 256), d=32, out_json=None,
+                       profile_json=None)
         _smoke_report(args.report)
-        print("\n# smoke OK — dist + api + mantel suites ran end-to-end "
-              "(no BENCH artifacts written) + obs battery passed the "
-              "recompile gate")
+        print("\n# smoke OK — dist + api + mantel + tune suites ran "
+              "end-to-end (no BENCH artifacts written) + obs battery "
+              "passed the recompile gate")
+        return
+
+    if args.suite == "tune":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size trajectory file
+            s = bench_tune.run(sizes=(256, 512), d=64,
+                               out_json="BENCH_tune_fast.json",
+                               profile_json="tune_profile.json")
+        else:
+            s = bench_tune.run()
+        print("\n# summary — modeled effective traffic, default / tuned")
+        for n, r in s.items():
+            worst = min(o["ratio"] for su in r["suites"].values()
+                        for o in su.values())
+            print(f"tune            n={n:<6d} worst suite ratio "
+                  f"{worst:6.2f}x (>= 1.00 required)")
         return
 
     if args.suite == "mantel":

@@ -178,6 +178,10 @@ class Workspace:
                  config: Optional[ExecConfig] = None, validate: bool = True,
                  *, features=None, metric=None):
         self.config = config if config is not None else ExecConfig()
+        # the as-requested config survives resolution so refresh() (a new
+        # n) re-solves from the user's intent, not a previous solution
+        self.config_requested = self.config
+        self.tuned = None
         self.generation = 0
         self.cache = HoistCache()
         # the observability session rides the whole Workspace lifetime
@@ -196,6 +200,7 @@ class Workspace:
                 raise ValueError("Workspace needs a distance matrix (or "
                                  "features= — see Workspace.from_features)")
             self._admit_dm(dm, validate)
+        self._resolve_config()
         self._bind_cache()
 
     @classmethod
@@ -302,8 +307,19 @@ class Workspace:
             # feature-backed: the lazily-materialized square (if any) was
             # derived from the dropped production — it goes too
             self._dm = None
+        self._resolve_config()
         self._bind_cache()
         return self
+
+    def _resolve_config(self) -> None:
+        """Materialize the requested config's auto knobs against the
+        admitted data's (n, d) via ``repro.tune`` — ``self.config`` is
+        always concrete after admission; ``self.config_requested`` keeps
+        the user's intent and ``self.tuned`` the solver record (None
+        when nothing asked for tuning)."""
+        d = (int(self._features.shape[1]) if self._features is not None
+             else None)
+        self.config, self.tuned = self.config_requested.resolve(self.n, d)
 
     def _bind_cache(self) -> None:
         """Point the (fresh) HoistCache at the session's observability
@@ -320,17 +336,54 @@ class Workspace:
         when ``config.obs.enabled`` is False)."""
         return self._obs
 
+    def resolved_tiles(self) -> dict:
+        """The tile geometry this session EXECUTES — post-tune (the
+        solver's choices when auto) and post-snap (the shared
+        ``kernels.dispatch`` lane rule at this backend/problem size) —
+        as opposed to the requested knob values ``config`` carries.
+        ``report()`` embeds this, so a RunReport records what actually
+        ran."""
+        from repro.kernels.dispatch import (lane_geometry, pick_block,
+                                            snap_chunk)
+        from repro.kernels.permute_reduce_ops import DEFAULT_CHUNK
+        lane, floor = lane_geometry(self.config.interpret)
+        m = self.n * (self.n - 1) // 2
+        chunk = (self.config.chunk if self.config.chunk is not None
+                 else DEFAULT_CHUNK)
+        tiles = {
+            "block": self.config.block,
+            "block_executed": pick_block(self.n, self.config.block, lane,
+                                         floor=floor),
+            "feature_block": self.config.feature_block,
+            "feature_block_executed": (
+                max(min(self.config.feature_block,
+                        int(self._features.shape[1])), 1)
+                if self._features is not None
+                else self.config.feature_block),
+            "batch_size": self.config.resolve_batch_size(None, 32),
+            "chunk": chunk,
+            "chunk_executed": snap_chunk(m, chunk)[0],
+            "lane": lane,
+            "auto": self.tuned is not None,
+        }
+        return tiles
+
     def report(self, meta: Optional[dict] = None) -> RunReport:
         """The session's ``RunReport``: span tree, analytic ledger
-        totals, HoistCache hit/miss counters, and the recompile
-        sentinel's trace/program deltas for this session's window. With
-        observability disabled the report still carries the always-on
-        telemetry (cache counters + the sentinel's process snapshot)
-        with empty spans and ledger."""
+        totals, HoistCache hit/miss counters, the recompile sentinel's
+        trace/program deltas for this session's window, and the
+        resolved tile geometry (plus the full ``repro.tune`` record —
+        chosen tiles, modeled bytes, budget — when the config was
+        auto-solved). With observability disabled the report still
+        carries the always-on telemetry (cache counters + the
+        sentinel's process snapshot) with empty spans and ledger."""
         base = {"n": self.n, "generation": self.generation,
                 "backing": ("features" if self._features is not None
                             else "distance_matrix"),
-                "obs_enabled": self._obs.enabled}
+                "obs_enabled": self._obs.enabled,
+                "tiles": self.resolved_tiles()}
+        if self.tuned is not None:
+            base["tune"] = self.tuned.to_dict()
         if meta:
             base.update(meta)
         return build_report(self._obs if self._obs.enabled else None,
@@ -547,7 +600,8 @@ class Workspace:
             stat = AnosimStatistic(None, codes, self.n, num_groups,
                                    pre=self.ranks(),
                                    kernel=self.config.kernel,
-                                   interpret=self.config.interpret)
+                                   interpret=self.config.interpret,
+                                   chunk=self.config.chunk)
             return engine.permutation_test(
                 stat, permutations, key, alternative="greater",
                 batch_size=self.config.resolve_batch_size(batch_size, 32),
@@ -593,7 +647,8 @@ class Workspace:
                    "ynorm": other.moments()["hat"]}
             stat = MantelStatistic(self.condensed(), None, self.n, pre=pre,
                                    kernel=self.config.kernel,
-                                   interpret=self.config.interpret)
+                                   interpret=self.config.interpret,
+                                   chunk=self.config.chunk)
             return engine.permutation_test(
                 stat, permutations, key, alternative=alternative,
                 batch_size=self.config.resolve_batch_size(batch_size, 32),
@@ -644,7 +699,8 @@ class Workspace:
                if self.config.kernel == "pallas" else PartialMantelStatistic)
         stat = cls(self.condensed(), None, None, self.n, pre=pre,
                    kernel=self.config.kernel,
-                   interpret=self.config.interpret)
+                   interpret=self.config.interpret,
+                   chunk=self.config.chunk)
         return engine.permutation_test(
             stat, permutations, key, alternative=alternative,
             batch_size=self.config.resolve_batch_size(batch_size, 32),

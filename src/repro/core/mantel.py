@@ -132,7 +132,7 @@ def _as_condensed(mat: jax.Array, n: int) -> jax.Array:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["x", "y", "pre"],
-         meta_fields=["n", "kernel", "interpret"])
+         meta_fields=["n", "kernel", "interpret", "chunk"])
 @dataclasses.dataclass
 class MantelStatistic:
     """Pearson r between permuted x and fixed y, hoisting split per §4.2 —
@@ -155,6 +155,7 @@ class MantelStatistic:
     pre: Optional[dict] = None
     kernel: str = "xla"
     interpret: Optional[bool] = None
+    chunk: Optional[int] = None  # condensed stream chunk (None: kernel default)
 
     def hoist(self):
         # the permuted side's condensed view and the triangle coordinate
@@ -186,7 +187,7 @@ class MantelStatistic:
         # once per tile and reused across the whole batch
         stats = permute_reduce(inv["xc"], inv["ynorm"][None, :], orders,
                                inv["ii"], inv["jj"], impl=self.kernel,
-                               interpret=self.interpret)
+                               chunk=self.chunk, interpret=self.interpret)
         return stats[0] / inv["normxm"]
 
 

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.metrics import Metric, get_metric, merge_acc
+from repro.kernels.dispatch import clamp_block
 from repro.obs.compile import note_trace
 from repro.obs.trace import current_obs
 
@@ -133,7 +134,7 @@ def pairwise_condensed(x, metric="braycurtis", *,
         x = x.astype(jnp.float32)
     n = x.shape[0]
     d = int(x.shape[1])
-    b = max(min(block, n), 1)
+    b = clamp_block(n, block)
     obs = current_obs()          # the ambient session (NULL_OBS when none)
 
     cond_parts, rs1_parts, rs2_parts = [], [], []
@@ -201,7 +202,7 @@ def pairwise_distances(x, metric="braycurtis", *, out: str = "square",
     if x.dtype != jnp.float32:
         x = x.astype(jnp.float32)
     n = x.shape[0]
-    b = max(min(block, n), 1)
+    b = clamp_block(n, block)
     parts = []
     for i0 in range(0, n, b):
         i1 = min(i0 + b, n)

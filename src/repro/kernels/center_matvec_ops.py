@@ -16,27 +16,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.center_matvec import center_matvec
+# the snapping/dispatch policy lives in kernels.dispatch now (shared with
+# the repro.tune solver); re-exported here for backward compatibility
+from repro.kernels.dispatch import (lane_geometry, pick_block,  # noqa: F401
+                                    resolve_interpret)
 from repro.obs.compile import note_trace
 
 _DEFAULT_BLOCK = 512
-
-
-def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """None = auto: native on TPU, interpreter everywhere else."""
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
-
-
-def pick_block(n: int, requested: int, lane: int = 8, floor: int = 1) -> int:
-    """Largest multiple-of-``lane`` block <= requested (tiny n falls back to
-    ``floor``; native TPU callers pass floor=lane to keep tiles lane-legal).
-    The single home of the lane-snapping rule — mantel_corr and the partial
-    Mantel statistic reuse it, so a lane-width change lands everywhere."""
-    b = min(requested, n)
-    if b >= lane:
-        b -= b % lane
-    return max(b, floor)
 
 
 @partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
@@ -55,15 +41,14 @@ def center_matvec_pallas(d: jax.Array, x: jax.Array, row_means: jax.Array,
     note_trace("kernels.center_matvec",
                (n, k, block_m, block_n, interpret))
     # TPU-native tiles need lane-aligned columns; the interpreter is free
-    lane_n = 8 if interpret else 128
-    floor_n = 1 if interpret else lane_n
+    lane_n, floor_n = lane_geometry(interpret)
     bm = pick_block(n, block_m)
     bn = pick_block(n, block_n, lane_n, floor=floor_n)
     pad = max((-n) % bm, (-n) % bn)      # keep D square
     np_ = n + pad
     bm = pick_block(np_, bm)
     bn = pick_block(np_, bn, lane_n, floor=floor_n)
-    pad_k = (-k) % (8 if interpret else 128)
+    pad_k = (-k) % lane_n
 
     # hoisted O(k) corrections — computed on the TRUE operands, pre-padding
     colsum = jnp.sum(x, axis=0)

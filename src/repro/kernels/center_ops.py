@@ -14,19 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.center import center_pass1, center_pass2
+# snapping policy shared with every dispatcher and the repro.tune solver
+from repro.kernels.dispatch import pick_block as _pick_block
 
 # VMEM is ~16 MiB/core on v5e; pass 1 holds one D tile + one E tile.
 # 512x512 fp32 = 1 MiB per tile: comfortable with double buffering.
 _DEFAULT_BLOCK = 512
-
-
-def _pick_block(n: int, requested: int) -> int:
-    """Largest multiple-of-8 block <= requested that keeps padding small."""
-    b = min(requested, n)
-    # round down to the fp32 sublane multiple; tiny inputs fall back to n.
-    if b >= 8:
-        b -= b % 8
-    return max(b, 1)
 
 
 @partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))

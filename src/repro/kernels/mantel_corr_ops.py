@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.center_matvec_ops import pick_block, resolve_interpret
+from repro.kernels.dispatch import (lane_geometry, pick_block,
+                                    resolve_interpret)
 from repro.kernels.mantel_corr import mantel_corr
 from repro.obs.compile import note_trace
 
@@ -59,8 +60,8 @@ def mantel_corr_pallas(x: jax.Array, y: jax.Array, orders: jax.Array,
     yhat = condensed_to_square(ynorm, n)
 
     # TPU-native tiles need lane-aligned (multiple-of-128) columns
-    lane = 8 if interpret else 128
-    b = pick_block(n, block, lane, floor=1 if interpret else lane)
+    lane, floor = lane_geometry(interpret)
+    b = pick_block(n, block, lane, floor=floor)
     pad = (-n) % b
     yhat_p = jnp.pad(yhat, ((0, pad), (0, pad))) if pad else yhat
 

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.metrics import Metric
-from repro.kernels.center_matvec_ops import pick_block, resolve_interpret
+from repro.kernels.dispatch import (lane_geometry, pick_block,
+                                    resolve_interpret)
 from repro.kernels.pairwise import pairwise_panel
 from repro.obs.compile import note_trace
 
@@ -44,8 +45,7 @@ def pairwise_panel_pallas(xi: jax.Array, x: jax.Array, *, metric: Metric,
                (tuple(xi.shape), n, d, metric.name, block_n, feature_block,
                 interpret))
     # TPU-native tiles need lane-aligned (multiple-of-128) trailing dims
-    lane = 8 if interpret else 128
-    floor = 1 if interpret else lane
+    lane, floor = lane_geometry(interpret)
     bn = pick_block(n, block_n, lane, floor=floor)
     pad_n = (-n) % bn
     fb = min(feature_block, d)

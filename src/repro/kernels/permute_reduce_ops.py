@@ -31,21 +31,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import snap_chunk
 from repro.kernels.permute_reduce import permute_reduce_kernel
 from repro.obs.compile import note_trace
 
 # condensed chunk streamed per grid step. 64k floats = 256 KiB per ys row:
 # big enough that the (B, chunk) gather tile amortizes loop overhead,
 # small enough to stay cache/VMEM-resident alongside the xc block.
-_DEFAULT_CHUNK = 65536
+# ``repro.tune`` solves this knob from the measured budget instead when
+# ``ExecConfig(auto=True)``; callers pass chunk=None to keep the default.
+DEFAULT_CHUNK = 65536
+_DEFAULT_CHUNK = DEFAULT_CHUNK            # backward-compat alias
 
-
-def _chunk_geometry(m: int, chunk: int) -> tuple:
-    """(chunk, m_pad): snap the chunk to the (8-aligned) condensed length
-    so tiny test problems don't pad 630 entries up to 65536."""
-    m8 = -(-max(m, 1) // 8) * 8
-    chunk = max(min(chunk, m8), 1)
-    return chunk, -(-m // chunk) * chunk
+# the chunk/padding geometry is the shared ``kernels.dispatch.snap_chunk``
+# policy (also consumed by the tuner's resident-set model)
+_chunk_geometry = snap_chunk
 
 
 def _reduce_xla(xc, ys, ii, jj, orders, n: int, chunk: int) -> jax.Array:
@@ -72,11 +72,10 @@ def _reduce_xla(xc, ys, ii, jj, orders, n: int, chunk: int) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk", "interpret"))
-def permute_reduce(xc: jax.Array, ys: jax.Array, orders: jax.Array,
-                   ii: Optional[jax.Array] = None,
-                   jj: Optional[jax.Array] = None, *,
-                   impl: str = "xla", chunk: int = _DEFAULT_CHUNK,
-                   interpret: Optional[bool] = None) -> jax.Array:
+def _permute_reduce_jit(xc: jax.Array, ys: jax.Array, orders: jax.Array,
+                        ii: Optional[jax.Array], jj: Optional[jax.Array], *,
+                        impl: str, chunk: int,
+                        interpret: Optional[bool]) -> jax.Array:
     """All B permuted condensed multiply-reduces of one invariant stack.
 
     out[s, b] = sum_k ys[s, k] * xc[tri(orders[b, i_k], orders[b, j_k])]
@@ -87,6 +86,11 @@ def permute_reduce(xc: jax.Array, ys: jax.Array, orders: jax.Array,
     int permutation tile. ii/jj: optional precomputed ``triangle_coords``
     (hoist them once per test; recomputed here when omitted).
     Returns (S, B) in xc's dtype.
+
+    This is the jitted body — call through ``permute_reduce``, which owns
+    the chunk-default normalization (so ``chunk=None`` and an explicit
+    ``chunk=DEFAULT_CHUNK`` share ONE jit cache entry and one sentinel
+    program).
     """
     # deferred: importing repro.core at module scope would cycle through
     # the package inits (core → mantel → stats → kernels)
@@ -134,3 +138,22 @@ def permute_reduce(xc: jax.Array, ys: jax.Array, orders: jax.Array,
         return permute_reduce_kernel(xc, ys, ii, jj, orders, chunk=chunk,
                                      interpret=interpret)
     return _reduce_xla(xc, ys, ii, jj, orders, n, chunk)
+
+
+def permute_reduce(xc: jax.Array, ys: jax.Array, orders: jax.Array,
+                   ii: Optional[jax.Array] = None,
+                   jj: Optional[jax.Array] = None, *, impl: str = "xla",
+                   chunk: Optional[int] = None,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """All B permuted condensed multiply-reduces of one invariant stack
+    (see ``_permute_reduce_jit`` for the exact semantics and shapes).
+
+    ``chunk=None`` keeps ``DEFAULT_CHUNK``; the ``repro.tune`` solver
+    passes a budget-solved value instead. Normalizing here — outside the
+    jit boundary — keeps None and the explicit default on one cache
+    entry and one sentinel program.
+    """
+    return _permute_reduce_jit(
+        xc, ys, orders, ii, jj, impl=impl,
+        chunk=DEFAULT_CHUNK if chunk is None else int(chunk),
+        interpret=interpret)

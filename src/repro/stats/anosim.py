@@ -77,7 +77,7 @@ def rank_transform(dm_data: jax.Array, n: int) -> dict:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["dm", "grouping", "pre"],
-         meta_fields=["n", "num_groups", "kernel", "interpret"])
+         meta_fields=["n", "num_groups", "kernel", "interpret", "chunk"])
 @dataclasses.dataclass
 class AnosimStatistic:
     """Clarke's R with ranks hoisted out of the Monte-Carlo loop, on the
@@ -97,6 +97,7 @@ class AnosimStatistic:
     pre: Optional[dict] = None   # optional pre-hoisted rank_transform dict
     kernel: str = "xla"
     interpret: Optional[bool] = None
+    chunk: Optional[int] = None  # condensed stream chunk (None: kernel default)
 
     def hoist(self):
         from repro.core.mantel import _as_condensed
@@ -134,7 +135,8 @@ class AnosimStatistic:
     def per_batch(self, inv, orders):
         w_sums = permute_reduce(inv["within"], inv["ranks"][None, :],
                                 orders, inv["ii"], inv["jj"],
-                                impl=self.kernel, interpret=self.interpret)
+                                impl=self.kernel, chunk=self.chunk,
+                                interpret=self.interpret)
         return self._finish_r(inv, w_sums[0])
 
 

@@ -221,12 +221,19 @@ def permutation_test(stat: Statistic, permutations: int = 999,
 
     ``key`` follows the unified coercion rule (``as_key``: key array, int
     seed, or None -> PRNGKey(0)). ``batch_size`` resolves as explicit arg >
-    ``config.batch_size`` > 8; ``method`` is recorded on the result.
+    ``config.batch_size`` > 8; a still-unresolved ``"auto"`` (a config
+    that never went through ``ExecConfig.resolve``/Workspace admission)
+    is solved here against the statistic's n — from (n, budget) only,
+    never K, so the one padded per-batch program keeps serving every K.
+    ``method`` is recorded on the result.
     """
     if alternative not in ("two-sided", "greater", "less"):
         raise ValueError(f"unknown alternative {alternative!r}")
     key = as_key(key)
     bs = (config or ExecConfig()).resolve_batch_size(batch_size, 8)
+    if bs == "auto":
+        from repro.tune.solve import solve_tiles
+        bs = solve_tiles(stat.n).batch_size
     obs = current_obs()          # the ambient session (NULL_OBS when none)
     batched = getattr(stat, "per_batch", None) is not None
     tiles = -(-permutations // bs) if permutations else 0

@@ -46,7 +46,7 @@ from repro.stats.engine import PermutationTestResult
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["x", "y", "z", "pre"],
-         meta_fields=["n", "kernel", "interpret"])
+         meta_fields=["n", "kernel", "interpret", "chunk"])
 @dataclasses.dataclass
 class PartialMantelStatistic:
     """r_xy·z with ŷ residualized against ẑ once, outside the loop —
@@ -68,6 +68,7 @@ class PartialMantelStatistic:
     pre: Optional[dict] = None
     kernel: str = "xla"
     interpret: Optional[bool] = None
+    chunk: Optional[int] = None  # condensed stream chunk (None: kernel default)
 
     def hoist(self):
         from repro.core.mantel import _as_condensed
@@ -104,7 +105,8 @@ class PartialMantelStatistic:
         # reductions, and each invariant streams once per B permutations
         ys = jnp.stack([inv["y_res"], inv["z"]])
         stats = permute_reduce(inv["xc"], ys, orders, inv["ii"], inv["jj"],
-                               impl=self.kernel, interpret=self.interpret)
+                               impl=self.kernel, chunk=self.chunk,
+                               interpret=self.interpret)
         num = stats[0] / inv["normxm"]
         r_xz = stats[1] / inv["normxm"]
         return num / jnp.sqrt(1.0 - r_xz * r_xz)
@@ -112,7 +114,7 @@ class PartialMantelStatistic:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["x", "y", "z", "pre"],
-         meta_fields=["n", "kernel", "interpret"])
+         meta_fields=["n", "kernel", "interpret", "chunk"])
 @dataclasses.dataclass
 class PartialMantelPallasStatistic(PartialMantelStatistic):
     """Same statistic with the Pallas ``permute_reduce`` backend pinned —

@@ -1,0 +1,33 @@
+"""repro.tune — cost-model-driven autotuning.
+
+Every tile size in this repo used to be a hand-picked constant (the
+center-matvec 512 block, the mantel/pairwise 256, the 64k permute
+chunk, the 8-vs-32 batch). This package picks them from a measured
+budget instead:
+
+* ``model``  — per-kernel closed-form traffic AND residency, the
+  traffic side imported verbatim from the audited ``obs.ledger``
+  registry (parity by construction);
+* ``budget`` — per-backend byte budgets (VMEM / L2-class) with an
+  optional two-point timed calibration, JSON-persistable;
+* ``solve``  — the solver: lane-snapped candidates, fit the modeled
+  resident set under the budget, minimize modeled effective traffic.
+
+Entry point for users: ``ExecConfig(auto=True)`` (or any single knob
+set to ``"auto"``) — ``Workspace`` resolves it against the admitted
+data's (n, d) and records the solved tiles in ``report()``.
+"""
+
+from repro.tune.budget import (BackendBudget, calibrate, detect_budget,
+                               load_profile, save_profile)
+from repro.tune.model import (CostTerms, matvec_cost, perm_batch_cost,
+                              perm_batch_fit, production_cost,
+                              session_hoist_passes)
+from repro.tune.solve import TunedTiles, resolve_exec_config, solve_tiles
+
+__all__ = [
+    "BackendBudget", "calibrate", "detect_budget", "load_profile",
+    "save_profile", "CostTerms", "matvec_cost", "perm_batch_cost",
+    "perm_batch_fit", "production_cost", "session_hoist_passes",
+    "TunedTiles", "resolve_exec_config", "solve_tiles",
+]
