@@ -1,0 +1,125 @@
+"""``--suite serve``: the front door's coalescing economics, gated.
+
+The serving claim is the continuous-batching one, restated for
+permutation tiles: R concurrent requests against the same study must
+cost ONE set of hoists and ``ceil(ΣK_r / B)`` padded tiles — not R sets
+of hoists and ``Σ ceil(K_r / B)`` tiles, which is what R independent
+library calls (or a slot-per-request scheduler that can't share tiles)
+would pay. Both quantities are analytic (the container-noise rule:
+wall-clock is ±40% noisy, structure isn't), priced by the SAME audited
+registry the live engine charges — ``obs.ledger.perm_traffic_floats``
+for tile traffic, the session ledger's hoist entries for the hoists —
+and the run's own per-study ``Ledger`` is the witness: the gates read
+the charges the serve path actually recorded, not a model of what it
+should have recorded.
+
+Gates (asserted, not just reported):
+* tiles executed == ceil(ΣK_r / B) per lane (the coalescing bound from
+  the acceptance criteria);
+* every hoist artifact charged exactly once per study, independent of R;
+* the ledger's recorded perm traffic == tiles × B × condensed_fused(n,B).
+
+``run()`` writes ``BENCH_serve.json`` (full sizes); ``--fast`` and
+``--smoke`` run smaller without touching the tracked artifact.
+"""
+
+import json
+import math
+import time
+
+import numpy as np
+
+from repro.obs.ledger import perm_traffic_floats
+from repro.serve import AnalysisService, ServeConfig
+
+#: mixed per-request K — deliberately not multiples of B, so the
+#: coalescing bound is exercised with ragged tails
+REQUEST_KS = (999, 499, 249, 99, 49, 17)
+
+
+def _workload(n: int, permutations: int, batch: int, requests: int,
+              seed: int = 0) -> dict:
+    """R concurrent mantel requests against one study, coalesced."""
+    rng = np.random.default_rng(seed)
+    svc = AnalysisService(ServeConfig(batch_size=batch, timeout_s=None,
+                                      max_active=requests,
+                                      auto_tune=False))
+    svc.upload("x", features=rng.random((n, 32)).astype(np.float32))
+    svc.upload("y", features=rng.random((n, 32)).astype(np.float32))
+
+    ks = [min(REQUEST_KS[i % len(REQUEST_KS)], permutations)
+          for i in range(requests)]
+    t0 = time.perf_counter()
+    handles = [svc.submit("x", "mantel", other="y", permutations=k, key=i)
+               for i, k in enumerate(ks)]
+    svc.run()
+    wall = time.perf_counter() - t0
+    assert all(h.status == "done" for h in handles), \
+        [h.payload() for h in handles if h.status != "done"]
+
+    # -- the coalescing gate: tiles == ceil(ΣK / B), one lane ------------
+    tiles_coalesced = svc.scheduler.tiles_run
+    tiles_expected = math.ceil(sum(ks) / batch)
+    tiles_per_request = sum(math.ceil(k / batch) for k in ks)
+    assert tiles_coalesced == tiles_expected, \
+        (tiles_coalesced, tiles_expected)
+
+    # -- the hoist gate: charged once per study, not per request ---------
+    ws = svc.pool.get("x")
+    hoist_entries = [e for e in ws.obs.ledger.entries
+                     if e.op.startswith("hoist:")]
+    ops = [e.op for e in hoist_entries]
+    assert len(ops) == len(set(ops)), f"hoist charged twice: {ops}"
+    builds = dict(ws.cache.misses)
+    assert all(v == 1 for v in builds.values()), builds
+
+    # -- the traffic gate: the ledger's own charges match the model ------
+    per_perm = perm_traffic_floats(n, batch)["condensed_fused"]
+    floats_coalesced = sum(
+        e.floats for e in ws.obs.ledger.entries
+        if e.op == "perm:serve:mantel")
+    assert abs(floats_coalesced
+               - tiles_coalesced * batch * per_perm) < 1e-6 * max(
+                   floats_coalesced, 1.0), \
+        (floats_coalesced, tiles_coalesced * batch * per_perm)
+    floats_per_request = tiles_per_request * batch * per_perm
+
+    return {
+        "n": n, "batch": batch, "requests": requests, "per_request_k": ks,
+        "total_permutations": sum(ks),
+        "tiles_coalesced": tiles_coalesced,
+        "tiles_per_request": tiles_per_request,
+        "tile_ratio": tiles_per_request / tiles_coalesced,
+        "perm_floats_coalesced": floats_coalesced,
+        "perm_floats_per_request": floats_per_request,
+        "traffic_ratio": floats_per_request / floats_coalesced,
+        "hoist_builds": {str(k): v for k, v in builds.items()},
+        "hoist_passes": ws.obs.ledger.hoist_passes(),
+        "wall_s": wall,
+        "throughput_rps": requests / wall,
+    }
+
+
+def run(sizes=(512, 2048), permutations: int = 999, batch: int = 32,
+        requests: int = 12, out_json: str = "BENCH_serve.json") -> dict:
+    print(f"\n## serve — cross-request tile coalescing "
+          f"(R={requests} concurrent mantel requests per study, "
+          f"mixed K, B={batch}; gates are analytic + ledger-verified)")
+    print(f"{'n':>6s} {'tiles':>7s} {'vs solo':>8s} {'traffic':>8s} "
+          f"{'hoists':>7s} {'wall':>8s}")
+    results = {}
+    for n in sizes:
+        r = _workload(n, permutations, batch, requests)
+        results[n] = r
+        print(f"{n:6d} {r['tiles_coalesced']:7d} "
+              f"{r['tile_ratio']:7.2f}x {r['traffic_ratio']:7.2f}x "
+              f"{len(r['hoist_builds']):7d} {r['wall_s'] * 1e3:6.0f}ms")
+    if out_json:
+        payload = {"suite": "serve", "permutations": permutations,
+                   "batch": batch, "requests": requests,
+                   "request_ks": list(REQUEST_KS),
+                   "results": {str(k): v for k, v in results.items()}}
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {out_json}")
+    return results

@@ -32,6 +32,11 @@ Suites:
     suite's workload at n ∈ {2048, 4096}; writes BENCH_tune.json plus
     the container's calibration profile (tune_profile.json). Gate:
     tuned never models worse than the constants.
+  serve — the repro.serve front door: R concurrent mixed-K mantel
+    requests against one pooled study, gated on the coalescing bound
+    (tiles == ceil(ΣK/B)), hoists charged once per study, and the
+    session ledger's perm traffic matching perm_traffic_floats; writes
+    BENCH_serve.json at n ∈ {512, 2048}.
 
 ``--smoke`` runs the dist + api + mantel suites at tiny sizes with NO
 BENCH artifact written — the CI guard that the benchmark entry points
@@ -51,7 +56,7 @@ import platform
 import jax
 
 from benchmarks import bench_api, bench_center, bench_dist, bench_mantel, \
-    bench_pcoa, bench_stats, bench_tune, bench_validation
+    bench_pcoa, bench_serve, bench_stats, bench_tune, bench_validation
 
 
 def _smoke_report(path: str) -> None:
@@ -111,13 +116,14 @@ def main() -> None:
                          "(uploaded by CI as a workflow artifact)")
     ap.add_argument("--suite", default="paper",
                     choices=("paper", "stats", "pcoa", "api", "dist",
-                             "mantel", "tune"),
+                             "mantel", "tune", "serve"),
                     help="paper tables (default), the repro.stats sweep, "
                          "the matrix-free ordination sweep, the hoist-once "
                          "Workspace session accounting, the fused "
                          "feature-table distance production, the "
                          "condensed Mantel permutation-traffic accounting, "
-                         "or the repro.tune solved-vs-default tile pricing")
+                         "the repro.tune solved-vs-default tile pricing, "
+                         "or the repro.serve coalescing gates")
     args, _ = ap.parse_known_args()
 
     print(f"# repro benchmarks — {platform.processor() or 'cpu'} · "
@@ -136,9 +142,14 @@ def main() -> None:
         # hand-picked constants in the analytic model (asserted inside)
         bench_tune.run(sizes=(64, 256), d=32, out_json=None,
                        profile_json=None)
+        # the serve gates: coalesced tiles == ceil(ΣK/B), hoists once
+        # per study, ledger traffic == the audited model (asserted
+        # inside bench_serve._workload)
+        bench_serve.run(sizes=(64,), permutations=99, batch=16,
+                        requests=6, out_json=None)
         _smoke_report(args.report)
-        print("\n# smoke OK — dist + api + mantel + tune suites ran "
-              "end-to-end (no BENCH artifacts written) + obs battery "
+        print("\n# smoke OK — dist + api + mantel + tune + serve suites "
+              "ran end-to-end (no BENCH artifacts written) + obs battery "
               "passed the recompile gate")
         return
 
@@ -157,6 +168,23 @@ def main() -> None:
                         for o in su.values())
             print(f"tune            n={n:<6d} worst suite ratio "
                   f"{worst:6.2f}x (>= 1.00 required)")
+        return
+
+    if args.suite == "serve":
+        if args.fast:
+            # separate artifact: fast-mode numbers must not clobber the
+            # tracked full-size trajectory file
+            s = bench_serve.run(sizes=(128, 256), permutations=199,
+                                batch=16, requests=8,
+                                out_json="BENCH_serve_fast.json")
+        else:
+            s = bench_serve.run()
+        print("\n# summary — coalesced serving vs per-request tiles "
+              "(ledger-verified)")
+        for n, r in s.items():
+            print(f"serve           n={n:<6d} {r['tile_ratio']:6.2f}x "
+                  f"fewer tiles, {r['traffic_ratio']:6.2f}x less perm "
+                  f"traffic, hoists once per study")
         return
 
     if args.suite == "mantel":

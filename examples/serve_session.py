@@ -1,0 +1,149 @@
+"""Multi-tenant serving walkthrough — three studies, one front door.
+
+The library story so far is single-tenant: one ``Workspace``, one
+analyst, hoists amortized within a session. ``repro.serve`` is the same
+economics made multi-tenant — an ``AnalysisService`` pools sessions in
+a bounded LRU, coalesces concurrent permutation requests against the
+same study into shared padded tiles (continuous batching, with
+permutation tiles where an LLM server has token slots), and streams
+partial p-values with a deterministic confidence envelope while the
+tiles drain.
+
+This example plays three labs sharing one service instance:
+
+* three studies uploaded (two feature-backed, one from a precomputed
+  square distance matrix) — each pays its O(n²) hoists exactly once, at
+  upload;
+* nine concurrent requests across the full battery (pcoa, permanova,
+  anosim, permdisp, mantel, partial_mantel) at mixed per-request K —
+  same-study mantel requests share tiles, so the scheduler runs
+  ceil(ΣK/B) tiles, not Σceil(K/B);
+* an async client that awaits its own handle while the shared
+  ``arun()`` driver turns tiles for everyone, printing streamed
+  ``StreamUpdate`` frames as its confidence interval tightens;
+* a structured rejection (a NaN upload bounces with a payload, not a
+  traceback) and the final ``serve_report()`` — pool residency, tile
+  counts, per-study ledgers, latency quantiles.
+
+    PYTHONPATH=src python examples/serve_session.py [--n 256]
+"""
+
+import argparse
+import asyncio
+import json
+
+import numpy as np
+
+from repro.serve import AnalysisService, Rejected, ServeConfig, serve_report
+
+
+def make_studies(n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    gradient = np.linspace(0.0, 1.0, n)[:, None]
+    gut = (rng.random((n, 16)) + 0.8 * gradient).astype(np.float32)
+    soil = (rng.random((n, 12)) + 0.5 * gradient).astype(np.float32)
+    climate = (rng.random((n, 4)) + gradient).astype(np.float32)
+    grouping = np.asarray(["ctl", "low", "mid", "high"])[
+        rng.integers(0, 4, size=n)]
+    return gut, soil, climate, grouping
+
+
+async def main(n: int) -> None:
+    gut, soil, climate, grouping = make_studies(n)
+    svc = AnalysisService(ServeConfig(batch_size=32, max_sessions=8,
+                                      timeout_s=120.0))
+
+    # -- uploads: the hoist bill is paid here, once per study ------------
+    for sid, feats in (("gut", gut), ("soil", soil)):
+        ack = svc.upload(sid, features=feats)
+        print(f"[upload] {sid:<8} n={ack['n']} backing={ack['backing']} "
+              f"hoist bytes={ack['cache_nbytes']}")
+    # the climate study arrives as a precomputed square matrix
+    from repro.api.workspace import Workspace
+    climate_dm = np.asarray(Workspace.from_features(climate).dm.data)
+    ack = svc.upload("climate", climate_dm)
+    print(f"[upload] climate  n={ack['n']} backing={ack['backing']}")
+
+    # -- a bad upload is a payload, not a traceback ----------------------
+    poisoned = gut.copy()
+    poisoned[3, 2] = np.nan
+    try:
+        svc.upload("oops", features=poisoned)
+    except Rejected as e:
+        print(f"[reject] {json.dumps(e.rejection.payload())}")
+
+    # -- nine concurrent requests, mixed methods and K -------------------
+    handles = [
+        svc.submit("gut", "permanova", grouping=grouping,
+                   permutations=999, key=0),
+        svc.submit("gut", "permdisp", grouping=grouping,
+                   permutations=499, key=1),
+        svc.submit("gut", "anosim", grouping=grouping,
+                   permutations=249, key=2),
+        # three same-lane mantel requests: these COALESCE into shared
+        # tiles (one hoist_lane, ceil((999+499+99)/32)=50 tiles)
+        svc.submit("gut", "mantel", other="soil", permutations=999, key=3),
+        svc.submit("gut", "mantel", other="soil", permutations=499, key=4),
+        svc.submit("gut", "mantel", other="soil", permutations=99, key=5),
+        svc.submit("gut", "partial_mantel", other="soil",
+                   control="climate", permutations=499, key=6),
+        svc.submit("soil", "permanova", grouping=grouping,
+                   permutations=999, key=7),
+        svc.submit("gut", "pcoa", dimensions=3),
+    ]
+    watched = handles[3]          # the K=999 mantel: stream its frames
+
+    async def watch(handle):
+        """A client awaiting its own result, reporting the stream."""
+        seen = 0
+
+        def flush():
+            nonlocal seen
+            for u in handle.updates[seen:]:
+                if u.draws_done % 256 < 32 or u.done:
+                    print(f"[stream] {handle.method} "
+                          f"{u.draws_done:>4}/{u.permutations} draws  "
+                          f"p ∈ [{u.p_lo:.4f}, {u.p_hi:.4f}]"
+                          + ("  <- final" if u.done else ""))
+            seen = len(handle.updates)
+
+        while not handle.done:
+            flush()
+            await asyncio.sleep(0)
+        flush()
+        return handle
+
+    done, _ = await asyncio.gather(watch(watched), svc.arun())
+    print(f"[stream] final p={done.result.p_value:.4f} — inside every "
+          f"streamed interval by construction")
+
+    # -- results ---------------------------------------------------------
+    print("\nrequest            status    result")
+    for h in handles:
+        if h.method == "pcoa":
+            desc = f"coords {h.result.coordinates.shape}"
+        else:
+            desc = (f"stat={h.result.statistic:+.4f} "
+                    f"p={h.result.p_value:.4f} (K={h.permutations})")
+        print(f"{h.request_id:>4} {h.method:<14}{h.status:<8}  {desc}")
+
+    # -- the service-wide report -----------------------------------------
+    rep = serve_report(svc)
+    g = rep["gauges"]
+    print(f"\n[report] {g['completed']} completed | "
+          f"{rep['scheduler']['tiles_run']} tiles of "
+          f"B={rep['scheduler']['batch_size']} | "
+          f"median latency {g['latency_s']['median'] * 1e3:.0f}ms | "
+          f"{rep['pool']['sessions']} pooled sessions, "
+          f"{rep['pool']['nbytes']} hoist bytes resident")
+    for sid, s in rep["studies"].items():
+        print(f"[report]   {sid:<8} hoists built "
+              f"{sum(s['hoist_builds'].values())}x "
+              f"(hit {sum(s['hoist_hits'].values())}x), "
+              f"{s['cache_nbytes']} bytes")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    asyncio.run(main(ap.parse_args().n))

@@ -141,7 +141,9 @@ class ExecConfig:
         semantics in one stroke: block, feature_block, batch_size and
         chunk are all solved by ``repro.tune.solve_tiles`` when the
         config is resolved against admitted data (``Workspace`` does
-        this on construction; standalone callers use ``resolve(n, d)``).
+        this on construction; ``repro.serve`` admission resolves it the
+        same way when a study is uploaded, so every pooled session
+        serves tuned tiles; standalone callers use ``resolve(n, d)``).
         Knobs set to explicit concrete values are honored untouched.
     tune_profile:
         Optional path of a ``repro.tune.save_profile`` JSON (a

@@ -47,6 +47,7 @@ data changes.
 
 from __future__ import annotations
 
+import dataclasses
 from collections import Counter
 from typing import Optional, Union
 
@@ -144,6 +145,58 @@ class HoistCache:
 
     def __len__(self):
         return len(self._store)
+
+    # -- resident-set accounting -------------------------------------------
+    def nbytes(self, key=None) -> int:
+        """Resident bytes of one cached artifact, or of the whole cache.
+
+        This is the currency of ``repro.serve``'s byte-budgeted session
+        eviction: a pooled study's cost is exactly its HoistCache's
+        resident set. With ``key=None`` the total deduplicates shared
+        buffers (e.g. the operator holds a reference to the same
+        condensed array the ``"condensed"`` entry stores — it is counted
+        once); a per-key query counts that artifact's full reachable set.
+        Unknown keys cost 0.
+        """
+        if key is not None:
+            if key not in self._store:
+                return 0
+            return _resident_nbytes(self._store[key], set())
+        return sum(self.nbytes_by_key().values())
+
+    def nbytes_by_key(self) -> dict:
+        """``{key: resident bytes}`` with shared buffers charged to the
+        FIRST key (insertion order) that reaches them — so the values sum
+        to the deduplicated total ``nbytes()`` returns."""
+        seen: set = set()
+        return {k: _resident_nbytes(v, seen)
+                for k, v in self._store.items()}
+
+
+def _resident_nbytes(value, seen: set) -> int:
+    """Bytes of every array buffer reachable from ``value``, walking
+    dicts/sequences/dataclasses (``OrdinationResult`` is a plain frozen
+    dataclass, not a pytree, so ``tree_leaves`` would treat it as one
+    opaque leaf — field recursion sees through it, and through the
+    operator dataclasses alike). ``seen`` dedups by object identity
+    across calls that share it."""
+    if value is None or isinstance(value, (bool, int, float, complex, str,
+                                           bytes)):
+        return 0
+    if id(value) in seen:
+        return 0
+    seen.add(id(value))
+    nb = getattr(value, "nbytes", None)
+    if isinstance(nb, (int, np.integer)):
+        return int(nb)
+    if isinstance(value, dict):
+        return sum(_resident_nbytes(v, seen) for v in value.values())
+    if isinstance(value, (list, tuple)):
+        return sum(_resident_nbytes(v, seen) for v in value)
+    if dataclasses.is_dataclass(value):
+        return sum(_resident_nbytes(getattr(value, f.name), seen)
+                   for f in dataclasses.fields(value))
+    return 0
 
 
 @jax.jit
@@ -377,11 +430,15 @@ class Workspace:
         auto-solved). With observability disabled the report still
         carries the always-on telemetry (cache counters + the
         sentinel's process snapshot) with empty spans and ledger."""
+        by_key = self.cache.nbytes_by_key()
         base = {"n": self.n, "generation": self.generation,
                 "backing": ("features" if self._features is not None
                             else "distance_matrix"),
                 "obs_enabled": self._obs.enabled,
-                "tiles": self.resolved_tiles()}
+                "tiles": self.resolved_tiles(),
+                "cache_nbytes": {"total": sum(by_key.values()),
+                                 "by_key": {str(k): v
+                                            for k, v in by_key.items()}}}
         if self.tuned is not None:
             base["tune"] = self.tuned.to_dict()
         if meta:
@@ -560,6 +617,96 @@ class Workspace:
                             method=method):
             return self.cache.get(cache_key, build)
 
+    # -- statistic construction (the serve seam) -----------------------------
+    def statistic(self, method: str, *, grouping=None, other=None,
+                  control=None, dimensions: Optional[int] = None,
+                  pcoa_method: str = "fsvd"):
+        """Build the hoisted ``(statistic, default_alternative)`` pair for
+        one permutation test, without running the Monte-Carlo loop.
+
+        This is the seam the analysis methods below and the
+        ``repro.serve`` scheduler share: the statistic carries every
+        cached hoist (so constructing it triggers at most the session's
+        one-time artifact builds), and the caller decides how to drive
+        the loop — ``engine.permutation_test`` for a whole test here,
+        ``engine.hoist_and_observe`` + ``engine.tile_statistics`` for the
+        front door's coalesced tiles. ``default_alternative`` is the
+        test's canonical sidedness ("greater" for the grouping tests,
+        "two-sided" for the Mantel family).
+        """
+        if method == "permanova":
+            # a feature-backed session runs the OPERATOR form: the
+            # per-permutation quadratic forms stream op.matvec(Z_p) off
+            # the condensed storage, so neither the square D nor the
+            # square Gower matrix is ever materialized
+            # (config.materialize=True restores the materialized baseline)
+            codes, num_groups = self._codes(grouping)
+            if self._features is not None and not self.config.materialize:
+                return PermanovaOperatorStatistic(
+                    self.operator(), codes, self.n, num_groups), "greater"
+            return PermanovaStatistic(self.data, codes, self.n, num_groups,
+                                      pre={"g": self.gram()}), "greater"
+        if method == "anosim":
+            # ranks stay condensed end to end; the statistic's dm field is
+            # only consumed when no pre-hoisted ranks are supplied
+            codes, num_groups = self._codes(grouping)
+            return AnosimStatistic(None, codes, self.n, num_groups,
+                                   pre=self.ranks(),
+                                   kernel=self.config.kernel,
+                                   interpret=self.config.interpret,
+                                   chunk=self.config.chunk), "greater"
+        if method == "permdisp":
+            codes, num_groups = self._codes(grouping)
+            dims = resolve_dimensions(dimensions, self.n)
+            coords = self.pcoa(dimensions=dims,
+                               method=pcoa_method).coordinates
+            return PermdispStatistic(coords, codes, self.n,
+                                     num_groups), "greater"
+        if method == "mantel":
+            y = self._coerce(other)
+            if y.n != self.n:
+                raise ValueError("x and y must have the same shape")
+            pre = {"normxm": self.moments()["norm"],
+                   "ynorm": y.moments()["hat"]}
+            return MantelStatistic(self.condensed(), None, self.n, pre=pre,
+                                   kernel=self.config.kernel,
+                                   interpret=self.config.interpret,
+                                   chunk=self.config.chunk), "two-sided"
+        if method == "partial_mantel":
+            y, z = self._coerce(other), self._coerce(control)
+            if not (self.n == y.n == z.n):
+                raise ValueError("x, y and z must have the same shape")
+            ym, zm = y.moments(), z.moments()
+            r_yz = jnp.dot(ym["hat"], zm["hat"])
+            # eager degeneracy check (can't raise inside the jitted
+            # engine): |r_yz|→1 makes the residualization 0/0, NaN-ing
+            # the whole null. 1e-5, not 1e-6: an fp32 self-correlation
+            # rounds to 1-r² as large as ~1e-6, and any genuine r_yz this
+            # close is numerically useless
+            r = float(r_yz)
+            if 1.0 - r * r < 1e-5:
+                raise ValueError(
+                    f"y and z are (nearly) collinear (r_yz={r:.6f}); the "
+                    f"partial correlation is undefined — use the plain "
+                    f"Mantel test")
+            denom = jnp.sqrt(1.0 - r_yz * r_yz)
+            pre = {"normxm": self.moments()["norm"], "r_yz": r_yz,
+                   "y_res": (ym["hat"] - r_yz * zm["hat"]) / denom,
+                   "z": zm["hat"]}
+            # fixed sides ride in via pre only (their y/z fields are
+            # consumed solely by the no-pre hoist) — nothing square for
+            # any operand
+            cls = (PartialMantelPallasStatistic
+                   if self.config.kernel == "pallas"
+                   else PartialMantelStatistic)
+            return cls(self.condensed(), None, None, self.n, pre=pre,
+                       kernel=self.config.kernel,
+                       interpret=self.config.interpret,
+                       chunk=self.config.chunk), "two-sided"
+        raise ValueError(
+            f"unknown method {method!r}; expected one of ('permanova', "
+            f"'anosim', 'permdisp', 'mantel', 'partial_mantel')")
+
     def permanova(self, grouping, permutations: int = 999, key=None,
                   batch_size: Optional[int] = None) -> PermutationTestResult:
         """PERMANOVA off the cached Gower centering (one-sided, greater).
@@ -569,18 +716,11 @@ class Workspace:
         condensed storage, so neither the square D nor the square Gower
         matrix is ever materialized (``config.materialize=True`` restores
         the materialized-gram baseline)."""
-        codes, num_groups = self._codes(grouping)
         with self._obs.span("ws.permanova", n=self.n,
                             permutations=permutations):
-            if self._features is not None and not self.config.materialize:
-                stat = PermanovaOperatorStatistic(self.operator(), codes,
-                                                  self.n, num_groups)
-            else:
-                stat = PermanovaStatistic(self.data, codes, self.n,
-                                          num_groups,
-                                          pre={"g": self.gram()})
+            stat, alt = self.statistic("permanova", grouping=grouping)
             return engine.permutation_test(
-                stat, permutations, key, alternative="greater",
+                stat, permutations, key, alternative=alt,
                 batch_size=self.config.resolve_batch_size(batch_size, 32),
                 config=self.config, method="permanova")
 
@@ -590,20 +730,13 @@ class Workspace:
 
         The ranks stay condensed end to end: the batched loop gathers
         the condensed within-indicator by closed-form triangle indexing,
-        so neither backing ever materializes a square rank matrix (the
-        statistic's ``dm`` field is only consumed when no pre-hoisted
-        ranks are supplied — it rides in as None here)."""
-        codes, num_groups = self._codes(grouping)
+        so neither backing ever materializes a square rank matrix."""
         with self._obs.span("ws.anosim", n=self.n,
                             permutations=permutations,
                             kernel=self.config.kernel):
-            stat = AnosimStatistic(None, codes, self.n, num_groups,
-                                   pre=self.ranks(),
-                                   kernel=self.config.kernel,
-                                   interpret=self.config.interpret,
-                                   chunk=self.config.chunk)
+            stat, alt = self.statistic("anosim", grouping=grouping)
             return engine.permutation_test(
-                stat, permutations, key, alternative="greater",
+                stat, permutations, key, alternative=alt,
                 batch_size=self.config.resolve_batch_size(batch_size, 32),
                 config=self.config, method="anosim")
 
@@ -615,14 +748,13 @@ class Workspace:
         The coordinate hoist is shared with ``ws.pcoa`` at matching
         (dimensions, method) — the whole ordination is computed at most
         once per session."""
-        codes, num_groups = self._codes(grouping)
         dims = resolve_dimensions(dimensions, self.n)
         with self._obs.span("ws.permdisp", n=self.n,
                             permutations=permutations, dimensions=dims):
-            coords = self.pcoa(dimensions=dims, method=method).coordinates
-            stat = PermdispStatistic(coords, codes, self.n, num_groups)
+            stat, alt = self.statistic("permdisp", grouping=grouping,
+                                       dimensions=dims, pcoa_method=method)
             return engine.permutation_test(
-                stat, permutations, key, alternative="greater",
+                stat, permutations, key, alternative=alt,
                 batch_size=self.config.resolve_batch_size(batch_size, 32),
                 config=self.config, method="permdisp")
 
@@ -637,18 +769,10 @@ class Workspace:
         contributes only its CONDENSED hat vector — neither session ever
         demands the lazy ``"square"`` key, so feature-backed Workspaces
         run the whole Mantel family with no n×n distance matrix."""
-        other = self._coerce(other)
-        if other.n != self.n:
-            raise ValueError("x and y must have the same shape")
         with self._obs.span("ws.mantel", n=self.n,
                             permutations=permutations,
                             kernel=self.config.kernel):
-            pre = {"normxm": self.moments()["norm"],
-                   "ynorm": other.moments()["hat"]}
-            stat = MantelStatistic(self.condensed(), None, self.n, pre=pre,
-                                   kernel=self.config.kernel,
-                                   interpret=self.config.interpret,
-                                   chunk=self.config.chunk)
+            stat, _ = self.statistic("mantel", other=other)
             return engine.permutation_test(
                 stat, permutations, key, alternative=alternative,
                 batch_size=self.config.resolve_batch_size(batch_size, 32),
@@ -663,48 +787,15 @@ class Workspace:
         three operands stay condensed (square-free like ``mantel``).
         Routes through the Pallas ``permute_reduce`` backend when
         ``config.kernel == "pallas"``."""
-        y, z = self._coerce(other), self._coerce(control)
-        if not (self.n == y.n == z.n):
-            raise ValueError("x, y and z must have the same shape")
-        span = self._obs.span("ws.partial_mantel", n=self.n,
-                              permutations=permutations,
-                              kernel=self.config.kernel).begin()
-        try:
-            return self._partial_mantel_body(
-                y, z, permutations, key, alternative, batch_size)
-        finally:
-            span.end()
-
-    def _partial_mantel_body(self, y, z, permutations, key, alternative,
-                             batch_size) -> PermutationTestResult:
-        ym, zm = y.moments(), z.moments()
-        r_yz = jnp.dot(ym["hat"], zm["hat"])
-        # eager degeneracy check (can't raise inside the jitted engine):
-        # |r_yz|→1 makes the residualization 0/0, NaN-ing the whole null.
-        # 1e-5, not 1e-6: an fp32 self-correlation rounds to 1-r² as large
-        # as ~1e-6, and any genuine r_yz this close is numerically useless
-        r = float(r_yz)
-        if 1.0 - r * r < 1e-5:
-            raise ValueError(
-                f"y and z are (nearly) collinear (r_yz={r:.6f}); the "
-                f"partial correlation is undefined — use the plain Mantel "
-                f"test")
-        denom = jnp.sqrt(1.0 - r_yz * r_yz)
-        pre = {"normxm": self.moments()["norm"], "r_yz": r_yz,
-               "y_res": (ym["hat"] - r_yz * zm["hat"]) / denom,
-               "z": zm["hat"]}
-        # fixed sides ride in via pre only (their y/z fields are consumed
-        # solely by the no-pre hoist) — nothing square for any operand
-        cls = (PartialMantelPallasStatistic
-               if self.config.kernel == "pallas" else PartialMantelStatistic)
-        stat = cls(self.condensed(), None, None, self.n, pre=pre,
-                   kernel=self.config.kernel,
-                   interpret=self.config.interpret,
-                   chunk=self.config.chunk)
-        return engine.permutation_test(
-            stat, permutations, key, alternative=alternative,
-            batch_size=self.config.resolve_batch_size(batch_size, 32),
-            config=self.config, method="partial_mantel")
+        with self._obs.span("ws.partial_mantel", n=self.n,
+                            permutations=permutations,
+                            kernel=self.config.kernel):
+            stat, _ = self.statistic("partial_mantel", other=other,
+                                     control=control)
+            return engine.permutation_test(
+                stat, permutations, key, alternative=alternative,
+                batch_size=self.config.resolve_batch_size(batch_size, 32),
+                config=self.config, method="partial_mantel")
 
     # -- plumbing -----------------------------------------------------------
     def _codes(self, grouping):

@@ -242,17 +242,11 @@ def mantel_distributed(x: DistanceMatrix, y: DistanceMatrix, mesh,
     x_data, y_data = x.data, y.data
 
     # one hoist implementation for host and distributed paths — only the
-    # column-sharded reduction below stays specialized; the observed stat
-    # is jitted so the identity-order gathers fuse away instead of
-    # materializing two full n×n copies eagerly
+    # column-sharded reduction below stays specialized; the shared engine
+    # entry point jits hoist + observed together so the identity-order
+    # gathers fuse away instead of materializing two full n×n copies
     stat = MantelStatistic(x_data, y_data, n)
-
-    @jax.jit
-    def _hoist_and_observe(s):
-        inv = s.hoist()
-        return inv, s.per_perm(inv, jnp.arange(s.n))
-
-    inv, orig_stat = _hoist_and_observe(stat)
+    inv, orig_stat = engine.hoist_and_observe(stat)
     normxm = inv["normxm"]
     # this path shards the MATRIX columns over 'model', so it is the one
     # remaining consumer of the square hat form — assembled here from the

@@ -1,90 +1,111 @@
-"""Serving launcher: batched prefill + continuous-batching decode loop.
+"""Serving launcher: the ``repro.serve`` analysis front door, end to end.
 
-``python -m repro.launch.serve --arch <id> --smoke --requests 8``
+``python -m repro.launch.serve --smoke``
 
-Implements the serving pattern the ``decode_32k`` cells model: a fixed
-decode batch; finished sequences (EOS or length budget) are immediately
-replaced from the request queue (continuous batching, slot reuse), so
-chip utilization is independent of per-request lengths.
+Drives an ``AnalysisService`` through a synthetic multi-tenant workload:
+several studies are uploaded, a mixed bag of concurrent requests (the
+full battery — pcoa, permanova, anosim, permdisp, mantel,
+partial_mantel — at mixed per-request K) is submitted, the coalescing
+tile loop drains them, and the ``serve_report()`` summary prints.
+
+This replaces the old token-decoding continuous-batching demo, which was
+dead code with a real bug: its slot-refill path popped the queued prompt
+and appended a fresh slot WITHOUT running a prefill, so a "refilled"
+request decoded against the previous occupant's stale KV cache. The
+permutation-tile scheduler keeps the idiom that demo was after — a
+finished request's tile rows are refilled from the queue on the very
+next tile — with the refill done correctly by construction: every row
+carries its own permutation order, so there is no per-slot state to
+forget to reset.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
+import json
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch
-from repro.launch.mesh import make_host_mesh
-from repro.models import transformer as tf_mod
-from repro.runtime.serve import build_decode_fn, build_prefill_fn
-from repro.runtime.train import init_train_state
-from repro.sharding.rules import make_rules
+from repro.serve import AnalysisService, ServeConfig
 
 
 def run(args) -> dict:
-    cfg = get_arch(args.arch, smoke=args.smoke)
-    if cfg.is_encdec:
-        raise SystemExit("serve loop demo covers decoder-only archs; "
-                         "see examples/quickstart for enc-dec decode")
-    mesh = make_host_mesh()
-    rules = make_rules(mesh)
-    params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(args.seed)
+    svc = AnalysisService(ServeConfig(batch_size=args.batch,
+                                      timeout_s=None,
+                                      max_sessions=max(4, args.studies)))
 
-    batch = args.batch
-    max_len = args.prompt_len + args.gen_len + 8
-    prefill = jax.jit(build_prefill_fn(cfg, max_len, rules))
-    decode = jax.jit(build_decode_fn(cfg, rules), donate_argnums=(2,))
+    # uploads: half feature-backed, half square-backed
+    study_ids = [f"study{i}" for i in range(args.studies)]
+    for i, sid in enumerate(study_ids):
+        feats = rng.random((args.n, 8)).astype(np.float32)
+        if i % 2:
+            from repro.api.workspace import Workspace
+            dm = np.asarray(
+                Workspace.from_features(feats).dm.data)
+            svc.upload(sid, dm)
+        else:
+            svc.upload(sid, features=feats)
 
-    rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab, size=args.prompt_len)
-             for _ in range(args.requests)]
-    done, active = [], []
+    grouping = np.arange(args.n) % 3
+    methods = ("permanova", "anosim", "permdisp", "mantel",
+               "partial_mantel", "pcoa")
+    handles = []
+    for r in range(args.requests):
+        sid = study_ids[r % len(study_ids)]
+        method = methods[r % len(methods)]
+        kw = {"permutations": args.permutations // (1 + r % 3),
+              "key": r}
+        if method in ("permanova", "anosim", "permdisp"):
+            kw["grouping"] = grouping
+        if method in ("mantel", "partial_mantel"):
+            kw["other"] = study_ids[(r + 1) % len(study_ids)]
+        if method == "partial_mantel":
+            kw["control"] = study_ids[(r + 2) % len(study_ids)]
+        if method == "pcoa":
+            kw = {"dimensions": 3}
+        handles.append(svc.submit(sid, method, **kw))
 
-    with mesh:
-        # initial wave: one batched prefill
-        wave = [queue.pop(0) for _ in range(min(batch, len(queue)))]
-        prompts = jnp.asarray(np.stack(wave), jnp.int32)
-        t0 = time.time()
-        logits, cache = prefill(params, {"tokens": prompts})
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        active = [{"generated": 0, "id": i} for i in range(len(wave))]
-        decoded_tokens = 0
-        while active:
-            logits, cache = decode(params, next_tok, cache)
-            next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            decoded_tokens += len(active)
-            for slot in list(active):
-                slot["generated"] += 1
-                if slot["generated"] >= args.gen_len:
-                    done.append(slot)
-                    active.remove(slot)
-                    # continuous batching: refill the slot from the queue
-                    if queue:
-                        queue.pop(0)
-                        active.append({"generated": 0, "id": len(done)
-                                       + len(active)})
-        dt = time.time() - t0
-    tput = decoded_tokens / dt
-    print(f"[serve] {len(done)} requests, {decoded_tokens} tokens in "
-          f"{dt:.2f}s → {tput:.1f} tok/s (host CPU demo)")
-    return {"requests": len(done), "tokens": decoded_tokens,
-            "tok_per_s": tput}
+    svc.run()
+    report = svc.report()
+    ok = sum(h.status == "done" for h in handles)
+    g = report["gauges"]
+    print(f"[serve] {ok}/{len(handles)} requests done | "
+          f"{report['scheduler']['tiles_run']} tiles of B={args.batch} | "
+          f"{report['pool']['sessions']} sessions, "
+          f"{report['pool']['nbytes']} hoist bytes resident | "
+          f"throughput {g['throughput_rps']:.1f} req/s")
+    for h in handles[: args.show]:
+        print(f"  {h.request_id:>4} {h.method:<14} {h.status:<8}"
+              + (f" p={h.result.p_value:.4f}"
+                 if getattr(h.result, "p_value", None) is not None else ""))
+    if args.json:
+        print(json.dumps({"gauges": g, "pool": report["pool"],
+                          "scheduler": report["scheduler"]}, indent=2,
+                         default=str))
+    return report
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
-    run(ap.parse_args())
+    ap = argparse.ArgumentParser(
+        description="drive the repro.serve analysis front door")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI-friendly)")
+    ap.add_argument("--studies", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--permutations", type=int, default=999)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--show", type=int, default=12,
+                    help="per-request lines to print")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the gauge/pool/scheduler sections as JSON")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n = min(args.n, 32)
+        args.permutations = min(args.permutations, 99)
+    run(args)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,9 @@ tag from the analysis stack's vocabulary:
 * ``production`` — the tiled feature-table → condensed-distance sweep
   (``repro.dist``);
 * ``solve``      — an eigensolve / subspace iteration (``core.pcoa``);
-* ``step``       — a training/serving step (``runtime.monitor``).
+* ``step``       — a training/serving step (``runtime.monitor``);
+* ``serve``      — front-door work in ``repro.serve`` (admission, tile
+  scheduling, request lifecycle).
 
 Spans nest (a ``ws.permanova`` span contains its ``hoist:gram`` child
 and the engine's ``per_perm`` span), export as plain dicts / JSON and as
@@ -41,7 +43,7 @@ import time
 from typing import Optional
 
 #: the phase vocabulary — see the module docstring
-PHASES = ("hoist", "per_perm", "production", "solve", "step")
+PHASES = ("hoist", "per_perm", "production", "solve", "step", "serve")
 
 
 class Span:

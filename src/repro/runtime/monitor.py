@@ -19,6 +19,13 @@ so step timings ride the same export surface as the analysis spans —
 JSON, Chrome ``trace_event``, ``Tracer.total("step")`` — and the
 ``StepRecord`` view is derived from the spans, not stored beside them.
 
+The same watchdog covers serving: ``repro.serve``'s tile scheduler
+times every permutation-tile execution through a ``StepMonitor``
+(``start()``/``stop()`` per tile), and the front door calls
+``heartbeat()`` between tiles so a stalled tile — one that began but
+never reached ``stop()`` — trips the deadline instead of hanging the
+serve loop silently.
+
 tests/test_runtime.py injects synthetic delays to verify flagging.
 """
 
@@ -26,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
+import time
 from typing import List, Optional
 
 from repro.obs.trace import Span, Tracer
@@ -83,6 +91,27 @@ class StepMonitor:
         span.add(step=step, straggler=flagged)
         self._spans.append(span)
         return StepRecord(step, span.duration, flagged)
+
+    # -- watchdog ---------------------------------------------------------
+    def elapsed(self) -> Optional[float]:
+        """Seconds the currently-open step has been running, or ``None``
+        when no step is open (between ``stop()`` and the next
+        ``start()``)."""
+        if self._open is None or self._open.t0 is None:
+            return None
+        return time.perf_counter() - self._open.t0
+
+    def heartbeat(self) -> None:
+        """The between-steps watchdog hook: if a step is open and has
+        already outlived the straggler deadline, raise ``TimeoutError``.
+        Drivers that interleave other work with timed steps (the
+        ``repro.serve`` tile loop) call this at their loop head, so a
+        tile that began but never completed is detected the next time
+        the loop turns instead of stalling the service silently. A
+        no-op when no step is open or no median exists yet."""
+        e = self.elapsed()
+        if e is not None:
+            self.check_deadline(e)
 
     # -- queries ----------------------------------------------------------
     @property

@@ -1,0 +1,31 @@
+"""repro.serve: the multi-tenant analysis front door.
+
+The library made each analysis cheap (hoist-once sessions, fused
+condensed permutation tiles); this package makes *many concurrent
+studies* cheap: a byte-budgeted LRU pool of live ``Workspace`` sessions
+(``pool``), a scheduler that coalesces permutation requests from
+different clients into shared padded tiles and streams anytime p-value
+bounds as tiles complete (``scheduler``), bounded admission with
+structured rejection (``admission``), and full ``repro.obs`` binding
+(``metrics``). ``AnalysisService`` in ``service`` is the assembled
+front door; ``python -m repro.launch.serve --smoke`` drives it end to
+end.
+"""
+
+from repro.serve.admission import (Rejected, Rejection, RequestQueue,
+                                   validate_upload)
+from repro.serve.metrics import ServeMetrics, serve_report
+from repro.serve.pool import SessionPool
+from repro.serve.scheduler import (Lane, StreamUpdate, TileScheduler,
+                                   exceedances, operand_fingerprint,
+                                   partial_bounds)
+from repro.serve.service import (METHODS, AnalysisService, RequestHandle,
+                                 ServeConfig)
+
+__all__ = [
+    "AnalysisService", "ServeConfig", "RequestHandle", "METHODS",
+    "SessionPool", "TileScheduler", "Lane", "StreamUpdate",
+    "RequestQueue", "Rejected", "Rejection", "validate_upload",
+    "ServeMetrics", "serve_report", "partial_bounds", "exceedances",
+    "operand_fingerprint",
+]

@@ -1,0 +1,138 @@
+"""ServeMetrics + serve_report: the front door's observability binding.
+
+Requests overlap in time, and the ``repro.obs`` tracer's nesting is
+strict begin/end bracketing — so request-lifecycle timings enter the
+span stream via ``Tracer.record`` (pre-timed appends, phase="serve"),
+never as live overlapping spans. Per-study analytic costs (hoist
+charges, per-tile permutation traffic) ride each pooled Workspace's own
+``ObsSession`` ledger — the same audited terms as the library engine —
+and ``serve_report()`` folds both together with the pool, queue, and
+watchdog state into one service-level document:
+
+* gauges — queue depth, active/admitted/completed/rejected counts,
+  throughput (completed per second of service uptime), latency
+  quantiles;
+* pool — sessions, per-study resident hoist bytes, evictions;
+* scheduler — tiles executed, rows per tile, live lanes;
+* studies — each pooled session's ledger totals + HoistCache counters
+  (so "hoists charged once per study, not per request" is a readable
+  fact, and the per-study ``RunReport`` remains available via
+  ``Workspace.report()``);
+* monitor — the ``StepMonitor`` summary (tile medians, stragglers).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from collections import Counter
+
+from repro.obs.trace import Tracer
+
+
+class ServeMetrics:
+    """Counters + gauges + a pre-timed span stream for one service."""
+
+    def __init__(self):
+        self.tracer = Tracer()
+        self.t0 = time.perf_counter()
+        self.admitted = 0          # requests accepted into the queue
+        self.uploads = 0
+        self.completed = 0
+        self.rejections = Counter()   # code -> count (timeouts included)
+        self.tiles = 0
+        self.tile_rows = 0
+        self.tile_parts = 0
+        self.latencies: list = []
+        self.queue_depth = 0
+
+    # -- recording ---------------------------------------------------------
+    def record_upload(self, study_id: str, n: int, seconds: float) -> None:
+        self.uploads += 1
+        self.tracer.record(f"upload:{study_id}", seconds, phase="serve",
+                           study=study_id, n=n)
+
+    def record_admission(self) -> None:
+        self.admitted += 1
+
+    def record_rejection(self, code: str) -> None:
+        self.rejections[code] += 1
+
+    def record_tile(self, rows: int, parts: int) -> None:
+        self.tiles += 1
+        self.tile_rows += rows
+        self.tile_parts += parts
+
+    def record_completion(self, handle, seconds: float) -> None:
+        """A finished request: latency gauge + one pre-timed serve span
+        (requests overlap, so live spans would corrupt the tracer's
+        nesting stack — ``record`` appends without opening one)."""
+        self.completed += 1
+        self.latencies.append(seconds)
+        self.tracer.record(f"request:{handle.method}", seconds,
+                           phase="serve", request_id=handle.request_id,
+                           study=handle.study_id,
+                           permutations=handle.permutations)
+
+    def sample_queue_depth(self, depth: int) -> None:
+        self.queue_depth = depth
+
+    # -- gauges ------------------------------------------------------------
+    def gauges(self) -> dict:
+        uptime = time.perf_counter() - self.t0
+        lat = sorted(self.latencies)
+        q = (lambda f: lat[min(len(lat) - 1, int(f * len(lat)))]
+             ) if lat else (lambda f: None)
+        return {
+            "uptime_s": uptime,
+            "queue_depth": self.queue_depth,
+            "uploads": self.uploads,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "rejected": dict(self.rejections),
+            "throughput_rps": (self.completed / uptime) if uptime else 0.0,
+            "latency_s": {
+                "median": statistics.median(lat) if lat else None,
+                "p90": q(0.9), "max": lat[-1] if lat else None,
+            },
+            "rows_per_tile": (self.tile_rows / self.tiles
+                              if self.tiles else None),
+            "requests_per_tile": (self.tile_parts / self.tiles
+                                  if self.tiles else None),
+        }
+
+
+def serve_report(service) -> dict:
+    """One service-level document (see module docstring)."""
+    pool, sched = service.pool, service.scheduler
+    studies = {}
+    for sid in pool.studies():
+        ws = pool._sessions[sid]
+        studies[sid] = {
+            "n": ws.n,
+            "generation": ws.generation,
+            "cache_nbytes": ws.cache.nbytes(),
+            "hoist_builds": {str(k): v for k, v in ws.cache.misses.items()},
+            "hoist_hits": {str(k): v for k, v in ws.cache.hits.items()},
+            "ledger": (ws.obs.ledger.totals() if ws.obs.enabled else {}),
+        }
+    return {
+        "gauges": service.metrics.gauges(),
+        "pool": {
+            "sessions": len(pool),
+            "max_sessions": pool.max_sessions,
+            "max_bytes": pool.max_bytes,
+            "nbytes": pool.nbytes(),
+            "nbytes_by_study": pool.nbytes_by_study(),
+            "evictions": pool.evictions,
+        },
+        "scheduler": {
+            "tiles_run": sched.tiles_run,
+            "batch_size": sched.batch_size,
+            "live_lanes": len(sched.lanes),
+        },
+        "studies": studies,
+        "monitor": (sched.monitor.summary() if sched.monitor._spans
+                    else {"steps": 0}),
+        "spans": service.metrics.tracer.to_dicts(),
+    }

@@ -1,0 +1,301 @@
+"""TileScheduler: cross-request coalescing of permutation tiles.
+
+The continuous-batching idiom, refactored from token slots to
+permutation tiles. A request for K permutations is K independent rows of
+``(n,)`` orders; the engine executes rows in padded ``(B, n)`` tiles
+(``stats.engine.tile_statistics``). Nothing about a row depends on its
+tile-mates — ``kernels.permute_reduce`` reduces each order column
+independently, and the vmapped ``per_perm`` fallback is row-independent
+too — so the scheduler is free to pack rows from *different* requests
+into one tile whenever they share the exact invariant stack (study,
+generation, method, operands). That buys:
+
+* **slot reuse** — when a request's last rows retire mid-tile, the next
+  tile immediately fills those rows from the queue's next request; chip
+  utilization doesn't dip between requests;
+* **one program per statistic shape** — every tile has the same (B, n)
+  avals regardless of per-request K (a drained lane pads by cycling the
+  rows it did collect), so the engine's one-padded-program sentinel
+  invariant extends across the whole mixed-K serve run;
+* **bitwise determinism** — each request's orders come from its own PRNG
+  key via ``engine.permutation_orders`` (identical to what a standalone
+  ``Workspace`` run draws), and row independence means its p-value is
+  bit-for-bit the same whether it ran alone or coalesced.
+
+Streaming: after each tile the scheduler pushes a ``StreamUpdate`` per
+contributing request — running exceedance count, the anytime estimate
+``p_partial``, and the *exact envelope* ``[p_lo, p_hi]``: ``p_lo``
+assumes every remaining draw misses, ``p_hi`` assumes every remaining
+draw exceeds, so ``p_lo`` is monotone nondecreasing, ``p_hi`` monotone
+nonincreasing, and the final p-value always lands inside every streamed
+interval (they converge to it at the last tile).
+
+Every tile is timed through a ``runtime.monitor.StepMonitor`` span
+(phase="step"), so the straggler/deadline watchdog covers serve loops,
+and charged to the study's ``repro.obs`` ledger with the same
+``charge_perm_batch`` terms the library engine uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.monitor import StepMonitor
+from repro.stats import engine
+
+
+# --------------------------------------------------------------------------
+# Streaming math
+# --------------------------------------------------------------------------
+def partial_bounds(c: int, draws_done: int, permutations: int) -> dict:
+    """Anytime p-value state after ``draws_done`` of K draws with ``c``
+    exceedances so far.
+
+    * ``p_partial = (c+1)/(draws_done+1)`` — the estimate *as if* the
+      test stopped here (a valid Monte-Carlo p at this draw count);
+    * ``p_lo = (c+1)/(K+1)`` — the final p if no remaining draw exceeds
+      (monotone nondecreasing in draws_done);
+    * ``p_hi = (c + (K - draws_done) + 1)/(K+1)`` — the final p if every
+      remaining draw exceeds (monotone nonincreasing).
+
+    The true final p-value lies in ``[p_lo, p_hi]`` for every prefix,
+    and both bounds equal it at ``draws_done == K`` — bitwise: all three
+    divide in fp32, the same arithmetic ``engine.finish`` performs, so
+    the last frame's collapsed envelope IS the final p-value.
+    """
+    f = np.float32
+    k1 = f(permutations + 1)
+    return {"p_partial": float(f(c + 1) / f(draws_done + 1)),
+            "p_lo": float(f(c + 1) / k1),
+            "p_hi": float(f(c + (permutations - draws_done) + 1) / k1)}
+
+
+def exceedances(observed: float, values: np.ndarray,
+                alternative: str) -> int:
+    """Null draws at least as extreme as ``observed`` — the numpy twin of
+    ``engine.count_better`` (identical comparisons on the same fp32
+    values, so incremental serve counts match the engine's one-shot
+    count exactly; a NaN observed compares False everywhere, and the
+    finisher turns that into a NaN p like ``engine.finish``)."""
+    v = np.asarray(values)
+    if alternative == "two-sided":
+        return int(np.sum(np.abs(v) >= abs(observed)))
+    if alternative == "greater":
+        return int(np.sum(v >= observed))
+    if alternative == "less":
+        return int(np.sum(v <= observed))
+    raise ValueError(f"unknown alternative {alternative!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamUpdate:
+    """One streamed progress frame for one request (see module docstring
+    for the bound semantics)."""
+
+    request_id: str
+    method: str
+    draws_done: int
+    permutations: int
+    exceedances: int
+    p_partial: float
+    p_lo: float
+    p_hi: float
+    done: bool
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------
+# Lane keys — "may these requests share a tile?"
+# --------------------------------------------------------------------------
+def operand_fingerprint(value) -> Optional[tuple]:
+    """Hashable identity of a request operand (grouping array etc.):
+    dtype + shape + content digest. Two requests coalesce only when
+    every operand fingerprint matches — identical invariant stacks."""
+    if value is None:
+        return None
+    arr = np.asarray(value)
+    return (arr.dtype.str, arr.shape,
+            hashlib.sha1(arr.tobytes()).hexdigest()[:16])
+
+
+# --------------------------------------------------------------------------
+# The scheduler
+# --------------------------------------------------------------------------
+class _Active:
+    """One in-flight request's scheduling state (internal)."""
+
+    __slots__ = ("handle", "orders", "cursor", "count", "observed",
+                 "alternative")
+
+    def __init__(self, handle, orders, observed: float, alternative: str):
+        self.handle = handle
+        self.orders = orders          # (K, n) — this request's own draws
+        self.cursor = 0               # rows already executed
+        self.count = 0                # running exceedances
+        self.observed = observed
+        self.alternative = alternative
+
+
+class Lane:
+    """All in-flight requests that share one invariant stack.
+
+    Holds the hoisted ``(stat, invariants, observed)`` built once at
+    lane creation and a FIFO of ``_Active`` requests. ``next_tile``
+    assembles the next (B, n) tile: rows come from the front request
+    until it drains, then the next (slot reuse); a short final tile pads
+    by cycling the rows it did collect — real permutations, so the tile
+    avals (and hence the compiled program) never change, and the padded
+    rows are simply not attributed to any request.
+    """
+
+    def __init__(self, key, ws, stat, invariants, observed: float,
+                 batch_size: int):
+        self.key = key
+        self.ws = ws
+        self.stat = stat
+        self.invariants = invariants
+        self.observed = observed
+        self.batch_size = int(batch_size)
+        self.requests: list = []
+        self.tiles_run = 0
+
+    def pending_rows(self) -> int:
+        return sum(a.orders.shape[0] - a.cursor for a in self.requests)
+
+    def next_tile(self):
+        """``(tile, parts)``: the (B, n) orders tile plus
+        ``[(active, take), ...]`` attributing its leading rows."""
+        b = self.batch_size
+        parts, chunks, have = [], [], 0
+        for a in self.requests:
+            if have == b:
+                break
+            take = min(b - have, a.orders.shape[0] - a.cursor)
+            if take:
+                chunks.append(a.orders[a.cursor:a.cursor + take])
+                parts.append((a, take))
+                have += take
+        if have < b:                      # drained: pad by cycling rows
+            real = jnp.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+            chunks.append(real[jnp.arange(b - have) % have])
+        tile = jnp.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+        return tile, parts
+
+
+class TileScheduler:
+    """Round-robin tile executor over coalescing lanes.
+
+    ``submit`` binds a request to its lane (creating the lane — one
+    hoist via ``engine.hoist_and_observe`` — when it is the first);
+    ``step`` executes ONE tile from the next lane with pending rows,
+    streams updates, finishes retired requests. The service drives
+    ``step`` in its event loop; ``monitor.heartbeat()`` runs at each
+    step head so a stalled tile trips the deadline watchdog.
+    """
+
+    def __init__(self, batch_size: int = 32,
+                 monitor: Optional[StepMonitor] = None, metrics=None):
+        self.batch_size = int(batch_size)
+        self.monitor = monitor if monitor is not None else StepMonitor()
+        self.metrics = metrics
+        self.lanes: "OrderedDict[tuple, Lane]" = OrderedDict()
+        self.tiles_run = 0
+        self._step_counter = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, handle, ws, lane_key, stat, default_alternative: str
+               ) -> None:
+        """Activate one admitted request on its lane."""
+        lane = self.lanes.get(lane_key)
+        if lane is None:
+            b = ws.config.resolve_batch_size(None, self.batch_size)
+            with ws.obs.span("serve.hoist_lane", phase="serve",
+                             method=handle.method, n=stat.n,
+                             batch_size=b):
+                invariants, observed = engine.hoist_and_observe(stat)
+            lane = Lane(lane_key, ws, stat, invariants, float(observed),
+                        b)
+            self.lanes[lane_key] = lane
+        orders = engine.permutation_orders(
+            handle.key, handle.permutations, stat.n)
+        alt = handle.alternative or default_alternative
+        active = _Active(handle, orders, lane.observed, alt)
+        lane.requests.append(active)
+        handle.status = "active"
+        handle.statistic = lane.observed
+
+    # -- execution ---------------------------------------------------------
+    def has_work(self) -> bool:
+        return any(lane.pending_rows() for lane in self.lanes.values())
+
+    def active_studies(self) -> set:
+        """Study ids with in-flight rows — the pool's eviction pin set."""
+        return {lane.key[0] for lane in self.lanes.values()
+                if lane.pending_rows()}
+
+    def step(self) -> bool:
+        """Execute one tile; returns False when no lane had work."""
+        self.monitor.heartbeat()
+        lane = next((ln for ln in self.lanes.values()
+                     if ln.pending_rows()), None)
+        if lane is None:
+            return False
+        # round-robin: the lane we serve moves to the back
+        self.lanes.move_to_end(lane.key)
+        tile, parts = lane.next_tile()
+        b = tile.shape[0]
+        self._step_counter += 1
+        self.monitor.start()
+        values = np.asarray(
+            engine.tile_statistics(lane.stat, lane.invariants, tile))
+        self.monitor.stop(self._step_counter)
+        lane.tiles_run += 1
+        self.tiles_run += 1
+        # the padded tail rows are real gathers — charged like the
+        # engine charges its own padded tiles
+        lane.ws.obs.charge_perm_batch(
+            f"serve:{parts[0][0].handle.method}", lane.stat.n, b, b)
+        if self.metrics is not None:
+            self.metrics.record_tile(b, len(parts))
+        offset = 0
+        for active, take in parts:
+            rows = values[offset:offset + take]
+            offset += take
+            active.count += exceedances(active.observed, rows,
+                                        active.alternative)
+            active.cursor += take
+            self._emit(active)
+        for active, _ in parts:
+            if active.cursor >= active.orders.shape[0]:
+                lane.requests.remove(active)
+        if not lane.pending_rows() and not lane.requests:
+            del self.lanes[lane.key]
+        return True
+
+    def _emit(self, active: _Active) -> None:
+        k = int(active.orders.shape[0])
+        done = active.cursor >= k
+        bounds = partial_bounds(active.count, active.cursor, k)
+        update = StreamUpdate(
+            request_id=active.handle.request_id,
+            method=active.handle.method,
+            draws_done=active.cursor, permutations=k,
+            exceedances=active.count, done=done, **bounds)
+        active.handle.push_update(update)
+        if done:
+            # identical finishing rule to engine.finish, down to the
+            # fp32 division: +1 correction, NaN observed -> NaN p
+            p = np.float32(active.count + 1) / np.float32(k + 1)
+            active.handle.complete(engine.PermutationTestResult(
+                active.observed,
+                float("nan") if np.isnan(active.observed) else float(p),
+                active.orders.shape[1], k, active.handle.method,
+                active.handle.key))

@@ -1,0 +1,386 @@
+"""AnalysisService: the multi-tenant front door over the analysis stack.
+
+One object ties the subsystem together: uploads admit studies into the
+``SessionPool`` (validation + ``ExecConfig(auto=True)`` tune-solve at
+admission), submissions enter the bounded ``RequestQueue``, and the
+event loop (``step`` / ``run`` / ``arun``) activates queued requests up
+to a concurrency bound and pumps the ``TileScheduler`` one coalesced
+tile at a time. Clients hold a ``RequestHandle``: streamed
+``StreamUpdate`` frames while tiles complete, then the final
+``PermutationTestResult`` (or an ``OrdinationResult`` for ``pcoa``,
+served synchronously off the pooled session's coordinate cache), or a
+structured ``Rejection`` — never a traceback.
+
+The service is cooperative and single-threaded by design (jax dispatch
+is itself async; tiles are the natural quantum): ``arun`` is an asyncio
+driver that yields between tiles so many client coroutines can await
+their handles concurrently — see ``examples/serve_session.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Optional
+
+from repro.api.config import ExecConfig
+from repro.core.distance_matrix import MAX_TRIANGLE_N
+from repro.obs.config import ObsConfig
+from repro.serve.admission import (Rejected, Rejection, RequestQueue,
+                                   validate_upload)
+from repro.serve.metrics import ServeMetrics, serve_report
+from repro.serve.pool import SessionPool
+from repro.serve.scheduler import TileScheduler, operand_fingerprint
+from repro.stats.engine import as_key
+
+#: the analyses the front door serves — the Workspace battery, complete
+METHODS = ("pcoa", "permanova", "anosim", "permdisp", "mantel",
+           "partial_mantel")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service knobs (all bounded-by-default: a front door that cannot
+    say no is a memory leak with an API).
+
+    ``batch_size`` is the coalesced tile's B — the same quantity as
+    ``ExecConfig.batch_size``, fixed service-wide so every study's tiles
+    share program shapes. ``max_active`` bounds concurrently-scheduled
+    requests (the rest wait in the admission queue, where ``timeout_s``
+    deadlines and ``max_queue`` backpressure apply). ``auto_tune`` runs
+    the ``repro.tune`` solver at upload against each study's own (n, d).
+    ``deadline_factor`` parameterizes the tile watchdog
+    (``runtime.monitor.StepMonitor``)."""
+
+    batch_size: int = 32
+    max_sessions: int = 8
+    max_bytes: Optional[int] = None
+    max_queue: int = 64
+    max_active: int = 8
+    max_n: int = MAX_TRIANGLE_N
+    timeout_s: Optional[float] = 30.0
+    auto_tune: bool = True
+    observe: bool = True
+    deadline_factor: float = 20.0
+
+
+class RequestHandle:
+    """A client's view of one request: status, streamed updates, result.
+
+    ``status`` walks queued → active → done (or rejected/timed_out).
+    ``updates`` accumulates ``StreamUpdate`` frames; ``result`` is the
+    final ``PermutationTestResult`` / ``OrdinationResult``; ``error``
+    the ``Rejection``. ``payload()`` is the wire-shaped response for
+    whatever state the request is in.
+    """
+
+    def __init__(self, request_id: str, study_id: str, method: str,
+                 permutations: int, key, alternative: Optional[str],
+                 params: dict):
+        self.request_id = request_id
+        self.study_id = study_id
+        self.method = method
+        self.permutations = permutations
+        self.key = key
+        self.alternative = alternative
+        self.params = params
+        self.status = "queued"
+        self.updates: list = []
+        self.result = None
+        self.error: Optional[Rejection] = None
+        self.statistic: Optional[float] = None
+        self.deadline: Optional[float] = None
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+
+    # -- scheduler callbacks ----------------------------------------------
+    def push_update(self, update) -> None:
+        self.updates.append(update)
+
+    def complete(self, result) -> None:
+        self.result = result
+        self.status = "done"
+        self.t_done = time.perf_counter()
+
+    def reject(self, rejection: Rejection) -> None:
+        self.error = rejection
+        self.status = ("timed_out" if rejection.code == "timeout"
+                       else "rejected")
+        self.t_done = time.perf_counter()
+
+    # -- client surface ----------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self.status in ("done", "rejected", "timed_out")
+
+    def partial(self):
+        """The latest streamed frame (None before the first tile)."""
+        return self.updates[-1] if self.updates else None
+
+    def payload(self) -> dict:
+        """The wire-shaped response for the request's current state."""
+        base = {"request_id": self.request_id, "study_id": self.study_id,
+                "method": self.method, "status": self.status}
+        if self.error is not None:
+            base.update(self.error.payload())
+        elif self.method == "pcoa":
+            if self.result is not None:
+                base["result"] = {
+                    "dimensions": int(self.result.coordinates.shape[1]),
+                    "proportion_explained":
+                        [float(v) for v in self.result.proportion_explained],
+                }
+        else:
+            if self.partial() is not None:
+                base["progress"] = self.partial().to_dict()
+            if self.result is not None:
+                base["result"] = {
+                    "statistic": self.result.statistic,
+                    "p_value": self.result.p_value,
+                    "permutations": self.result.permutations,
+                    "sample_size": self.result.sample_size,
+                }
+        return base
+
+
+class AnalysisService:
+    """The front door (see module docstring)."""
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.config = config if config is not None else ServeConfig()
+        self.pool = SessionPool(self.config.max_sessions,
+                                self.config.max_bytes)
+        self.queue = RequestQueue(self.config.max_queue)
+        self.metrics = ServeMetrics()
+        self.scheduler = TileScheduler(
+            batch_size=self.config.batch_size, metrics=self.metrics)
+        self.scheduler.monitor.deadline_factor = self.config.deadline_factor
+        self._active: list = []
+        self._ids = itertools.count(1)
+        self._exec_config = ExecConfig(
+            batch_size=self.config.batch_size,
+            auto=self.config.auto_tune,
+            obs=ObsConfig(enabled=self.config.observe))
+
+    # -- uploads -----------------------------------------------------------
+    def upload(self, study_id: str, data=None, *, features=None,
+               metric=None) -> dict:
+        """Admit (or re-admit) one study; returns the admission ack.
+
+        Validation happens before any O(n²) work (structured rejection
+        payloads for non-finite/oversized/misshapen uploads); admission
+        builds the pooled ``Workspace`` — which resolves
+        ``ExecConfig(auto=True)`` against this study's own (n, d) — and
+        re-upload of a known id routes through ``Workspace.refresh``:
+        the generation bumps, every cached hoist drops, and in-flight
+        requests pinned to the old generation finish against the data
+        they were admitted with.
+        """
+        t0 = time.perf_counter()
+        try:
+            kind, n = validate_upload(data, features,
+                                      max_n=self.config.max_n)
+        except Rejected as e:
+            self.metrics.record_rejection(e.rejection.code)
+            raise
+        try:
+            ws = self.pool.admit(
+                study_id, self._exec_config,
+                dm=data if kind == "dm" else None,
+                features=features if kind == "features" else None,
+                metric=metric)
+        except ValueError as e:
+            # the Workspace's own admission checks (asymmetry, non-hollow
+            # diagonal, ...) — still a structured refusal, not a traceback
+            self.metrics.record_rejection("bad_request")
+            raise Rejected(Rejection("bad_request", str(e),
+                                     {"study_id": study_id})) from None
+        self.metrics.record_upload(study_id, n,
+                                   time.perf_counter() - t0)
+        return {"study_id": study_id, "n": ws.n,
+                "generation": ws.generation,
+                "backing": kind,
+                "cache_nbytes": ws.cache.nbytes(),
+                "tuned": ws.tuned is not None}
+
+    # -- submissions -------------------------------------------------------
+    def submit(self, study_id: str, method: str, *, grouping=None,
+               other=None, control=None, permutations: int = 999,
+               key=None, alternative: Optional[str] = None,
+               dimensions: Optional[int] = None, pcoa_method: str = "fsvd",
+               timeout_s: Optional[float] = None) -> RequestHandle:
+        """Enqueue one analysis request; returns its handle immediately.
+
+        ``other``/``control`` name *uploaded studies* (the Mantel-family
+        operands live server-side, like the permuted side). The request
+        waits in the bounded queue until the loop activates it;
+        ``queue_full`` raises ``Rejected`` immediately, a lapsed
+        ``timeout_s`` fails the handle with a ``timeout`` rejection.
+        """
+        if method not in METHODS:
+            self.metrics.record_rejection("bad_request")
+            raise Rejected.make(
+                "bad_request",
+                f"unknown method {method!r}; available: {list(METHODS)}",
+                method=method)
+        if study_id not in self.pool:
+            self.metrics.record_rejection("unknown_study")
+            raise Rejected.make(
+                "unknown_study",
+                f"study {study_id!r} is not resident (never uploaded, or "
+                f"evicted) — upload it first", study_id=study_id)
+        handle = RequestHandle(
+            request_id=f"r{next(self._ids)}", study_id=study_id,
+            method=method, permutations=int(permutations),
+            key=as_key(key), alternative=alternative,
+            params={"grouping": grouping, "other": other,
+                    "control": control, "dimensions": dimensions,
+                    "pcoa_method": pcoa_method})
+        try:
+            self.queue.push(handle, timeout_s if timeout_s is not None
+                            else self.config.timeout_s)
+        except Rejected as e:
+            self.metrics.record_rejection(e.rejection.code)
+            handle.reject(e.rejection)
+            return handle
+        self.metrics.record_admission()
+        self.metrics.sample_queue_depth(len(self.queue))
+        return handle
+
+    # -- activation --------------------------------------------------------
+    def _lane_key(self, ws, handle) -> tuple:
+        """Requests may share a tile iff this matches: same study at the
+        same generation, same method, same operand identities (grouping
+        content; Mantel operand studies at their own generations; the
+        ordination geometry behind permdisp)."""
+        p = handle.params
+        operands = [operand_fingerprint(p["grouping"])]
+        for name in ("other", "control"):
+            sid = p[name]
+            if sid is not None:
+                ref = self.pool.get(sid)
+                operands.append((sid, ref.generation if ref else None))
+            else:
+                operands.append(None)
+        operands.append((p["dimensions"], p["pcoa_method"])
+                        if handle.method == "permdisp" else None)
+        return (handle.study_id, ws.generation, handle.method,
+                tuple(operands))
+
+    def _activate(self, handle) -> None:
+        """Bind one queued request to the scheduler (or finish it on the
+        spot for ``pcoa``). Statistic-construction failures — bad
+        grouping length, mismatched operand sizes, collinear partial-
+        Mantel controls — become ``bad_request`` rejections."""
+        ws = self.pool.get(handle.study_id)
+        if ws is None:                        # evicted while queued
+            handle.reject(Rejection(
+                "unknown_study",
+                f"study {handle.study_id!r} was evicted while the "
+                f"request waited; re-upload and retry",
+                {"study_id": handle.study_id}))
+            self.metrics.record_rejection("unknown_study")
+            return
+        p = handle.params
+        try:
+            if handle.method == "pcoa":
+                dims = p["dimensions"] if p["dimensions"] is not None else 10
+                result = ws.pcoa(dimensions=dims, method=p["pcoa_method"],
+                                 key=handle.key)
+                handle.complete(result)
+                self._finish(handle)
+                return
+            kwargs = {}
+            if handle.method in ("permanova", "anosim", "permdisp"):
+                kwargs["grouping"] = p["grouping"]
+            if handle.method == "permdisp":
+                kwargs["dimensions"] = p["dimensions"]
+                kwargs["pcoa_method"] = p["pcoa_method"]
+            if handle.method in ("mantel", "partial_mantel"):
+                kwargs["other"] = self._resolve_operand(p["other"], "other")
+            if handle.method == "partial_mantel":
+                kwargs["control"] = self._resolve_operand(p["control"],
+                                                          "control")
+            stat, default_alt = ws.statistic(handle.method, **kwargs)
+            self.scheduler.submit(handle, ws, self._lane_key(ws, handle),
+                                  stat, default_alt)
+            self._active.append(handle)
+        except Rejected as e:
+            handle.reject(e.rejection)
+            self.metrics.record_rejection(e.rejection.code)
+        except (ValueError, TypeError) as e:
+            rej = Rejection("bad_request", str(e),
+                            {"method": handle.method})
+            handle.reject(rej)
+            self.metrics.record_rejection("bad_request")
+
+    def _resolve_operand(self, sid, role: str):
+        if sid is None:
+            raise Rejected.make("bad_request",
+                                f"this method requires {role}= naming an "
+                                f"uploaded study")
+        ws = self.pool.get(sid)
+        if ws is None:
+            raise Rejected.make("unknown_study",
+                                f"{role} study {sid!r} is not resident",
+                                study_id=sid)
+        return ws
+
+    # -- the loop ----------------------------------------------------------
+    def step(self) -> bool:
+        """One loop turn: expire lapsed deadlines, activate queued
+        requests up to ``max_active``, run one coalesced tile, retire
+        finished requests. Returns True while work remains."""
+        now = time.monotonic()
+        for handle in self.queue.expired(now):
+            handle.reject(Rejection(
+                "timeout",
+                f"request waited past its {self.config.timeout_s}s "
+                f"deadline in the admission queue",
+                {"request_id": handle.request_id}))
+            self.metrics.record_rejection("timeout")
+        self._active = [h for h in self._active if not h.done]
+        while len(self._active) < self.config.max_active and len(self.queue):
+            handle = self.queue.pop()
+            if handle is None:
+                break
+            self._activate(handle)
+        self.metrics.sample_queue_depth(len(self.queue))
+        ran = self.scheduler.step()
+        for handle in list(self._active):
+            if handle.done:
+                self._finish(handle)
+                self._active.remove(handle)
+        # keep in-flight studies out of eviction's reach
+        self.pool.evict(exclude=self.scheduler.active_studies())
+        return ran or bool(len(self.queue)) or bool(self._active)
+
+    def _finish(self, handle) -> None:
+        self.metrics.record_completion(
+            handle, (handle.t_done or time.perf_counter())
+            - handle.t_submit)
+
+    def run(self) -> None:
+        """Drain synchronously: loop until queue and scheduler are empty."""
+        while self.step():
+            pass
+
+    async def arun(self) -> None:
+        """Asyncio driver: one tile per loop turn, yielding between
+        tiles so client coroutines awaiting handles interleave."""
+        import asyncio
+        while self.step():
+            await asyncio.sleep(0)
+
+    async def wait(self, handle: RequestHandle):
+        """Await one handle (pump the loop while it is pending)."""
+        import asyncio
+        while not handle.done:
+            self.step()
+            await asyncio.sleep(0)
+        return handle
+
+    # -- reporting ---------------------------------------------------------
+    def report(self) -> dict:
+        return serve_report(self)

@@ -164,8 +164,48 @@ def finish(orig_stat, permuted_stats, permutations: int, alternative: str,
 
 
 # --------------------------------------------------------------------------
-# The engine
+# The engine — plus the two tile-level entry points the serving front door
+# (`repro.serve`) schedules through. `_null_distribution` remains the
+# whole-test fast path; `hoist_and_observe` + `tile_statistics` expose the
+# same split at tile granularity so a scheduler can interleave tiles from
+# many concurrent requests while reusing the identical traces.
 # --------------------------------------------------------------------------
+@jax.jit
+def hoist_and_observe(stat):
+    """``(invariants, observed)`` for ``stat``, one jit region.
+
+    The hoist and the identity-order observed evaluation fuse together
+    (the identity gathers fold away instead of materializing full n×n
+    copies eagerly). Shared by the distributed engine and by
+    ``repro.serve`` admission, which hoists once per pooled session and
+    then streams tiles through ``tile_statistics``.
+    """
+    note_trace("stats.engine.hoist_and_observe",
+               (type(stat).__name__, stat.n))
+    inv = stat.hoist()
+    return inv, stat.per_perm(inv, jnp.arange(stat.n))
+
+
+@jax.jit
+def tile_statistics(stat, invariants, orders):
+    """(B,) null statistics for one padded tile of permutation orders.
+
+    The serve scheduler's execution primitive: every tile it assembles —
+    regardless of which requests' permutations fill the rows — runs
+    through this one trace per (statistic class, n, B) signature, so the
+    one-program-per-K sentinel invariant extends across requests. Rows
+    are independent (``per_batch`` reduces each order against the same
+    hoisted invariants), which is what makes coalescing bitwise-neutral:
+    a request's draws do not depend on its tile-mates.
+    """
+    note_trace("stats.engine.tile",
+               (type(stat).__name__, stat.n, orders.shape[0]))
+    per_batch = getattr(stat, "per_batch", None)
+    if per_batch is not None:
+        return per_batch(invariants, orders)
+    return jax.vmap(lambda o: stat.per_perm(invariants, o))(orders)
+
+
 @partial(jax.jit, static_argnames=("permutations", "batch_size"))
 def _null_distribution(stat, key, permutations: int, batch_size: int):
     """observed statistic + (K,) null draws, one jit region.
@@ -281,14 +321,7 @@ def permutation_test_distributed(stat: Statistic, mesh,
                          f"{n_perm_devices} devices")
     per_dev = permutations // n_perm_devices
 
-    # hoist + observed in one jit region: the identity-order gathers fuse
-    # away instead of materializing full n×n copies eagerly
-    @jax.jit
-    def _hoist_and_observe(s):
-        inv = s.hoist()
-        return inv, s.per_perm(inv, jnp.arange(s.n))
-
-    invariants, observed = _hoist_and_observe(stat)
+    invariants, observed = hoist_and_observe(stat)
 
     def _local(inv):
         dev = 0                     # row-major rank over ALL perm axes, so
