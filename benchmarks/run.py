@@ -48,6 +48,13 @@ feature-backed Workspace under the recompile sentinel — the padded
 program per invariant-stack shape across different K values — and
 writes the session's ``RunReport`` JSON (``--report``, default
 ``RunReport_smoke.json``; CI uploads it as a workflow artifact).
+
+Every suite (and the smoke) finishes through the perf-trajectory gate
+(``benchmarks/trajectory.py``): its analytic ratios — plus, in smoke,
+the ``obs.probe`` compile-time byte measurements — append to
+``BENCH_trajectory.jsonl`` and are compared against the committed
+``benchmarks/trajectory_baseline.json``; a regression past tolerance
+exits nonzero. Wall-clock never gates (±40% container noise).
 """
 
 import argparse
@@ -56,7 +63,8 @@ import platform
 import jax
 
 from benchmarks import bench_api, bench_center, bench_dist, bench_mantel, \
-    bench_pcoa, bench_serve, bench_stats, bench_tune, bench_validation
+    bench_pcoa, bench_serve, bench_stats, bench_tune, bench_validation, \
+    trajectory
 
 
 def _smoke_report(path: str) -> None:
@@ -133,24 +141,38 @@ def main() -> None:
           "RATIO (see EXPERIMENTS.md §Benchmarks)")
 
     if args.smoke:
-        bench_dist.run(sizes=(128, 256), d=32, permutations=49,
-                       out_json=None)
-        bench_api.run(sizes=(128,), permutations=49, out_json=None)
-        bench_mantel.run_suite(sizes=(64,), permutations=19, batch=8,
-                               out_json=None)
+        smoke = {}
+        smoke["dist"] = bench_dist.run(sizes=(128, 256), d=32,
+                                       permutations=49, out_json=None)
+        smoke["api"] = bench_api.run(sizes=(128,), permutations=49,
+                                     out_json=None)
+        smoke["mantel"] = bench_mantel.run_suite(sizes=(64,),
+                                                 permutations=19, batch=8,
+                                                 out_json=None)
         # the tune gate: solver tiles never price worse than the
         # hand-picked constants in the analytic model (asserted inside)
-        bench_tune.run(sizes=(64, 256), d=32, out_json=None,
-                       profile_json=None)
+        smoke["tune"] = bench_tune.run(sizes=(64, 256), d=32,
+                                       out_json=None, profile_json=None)
         # the serve gates: coalesced tiles == ceil(ΣK/B), hoists once
         # per study, ledger traffic == the audited model (asserted
         # inside bench_serve._workload)
-        bench_serve.run(sizes=(64,), permutations=99, batch=16,
-                        requests=6, out_json=None)
+        smoke["serve"] = bench_serve.run(sizes=(64,), permutations=99,
+                                         batch=16, requests=6,
+                                         out_json=None)
         _smoke_report(args.report)
+        # the perf-trajectory gate: every suite's analytic ratios plus
+        # the compile-time probe measurements, appended to the JSONL
+        # ledger and compared against the committed baseline. A
+        # regression past tolerance exits nonzero (wall-clock is never
+        # gated — see benchmarks/trajectory.py).
+        metrics = {}
+        for suite, results in smoke.items():
+            metrics.update(trajectory.flatten(suite, results))
+        metrics.update(trajectory.probe_metrics())
+        trajectory.check("smoke", metrics)
         print("\n# smoke OK — dist + api + mantel + tune + serve suites "
               "ran end-to-end (no BENCH artifacts written) + obs battery "
-              "passed the recompile gate")
+              "passed the recompile gate + trajectory gate green")
         return
 
     if args.suite == "tune":
@@ -168,6 +190,7 @@ def main() -> None:
                         for o in su.values())
             print(f"tune            n={n:<6d} worst suite ratio "
                   f"{worst:6.2f}x (>= 1.00 required)")
+        trajectory.check("tune", s)
         return
 
     if args.suite == "serve":
@@ -185,6 +208,7 @@ def main() -> None:
             print(f"serve           n={n:<6d} {r['tile_ratio']:6.2f}x "
                   f"fewer tiles, {r['traffic_ratio']:6.2f}x less perm "
                   f"traffic, hoists once per study")
+        trajectory.check("serve", s)
         return
 
     if args.suite == "mantel":
@@ -201,6 +225,7 @@ def main() -> None:
             print(f"mantel-traffic  n={n:<6d} "
                   f"{r['ratio_vs_square_gather']:6.2f}x less traffic "
                   f"({r['ratio_vs_original']:.2f}x vs eager original)")
+        trajectory.check("mantel", s)
         return
 
     if args.suite == "dist":
@@ -216,6 +241,7 @@ def main() -> None:
             print(f"dist-session    n={n:<6d} {r['bytes_avoided'] / 1e6:8.1f}"
                   f" MB avoided ({r['peak_ratio']:.2f}x peak matrix bytes,"
                   f" {r['traffic_ratio']:.2f}x hoist traffic, analytic)")
+        trajectory.check("dist", s)
         return
 
     if args.suite == "api":
@@ -230,6 +256,7 @@ def main() -> None:
         for n, r in s.items():
             print(f"api-session     n={n:<6d} {r['traffic_ratio']:6.2f}x "
                   f"less matrix traffic (analytic)")
+        trajectory.check("api", s)
         return
 
     if args.suite == "pcoa":

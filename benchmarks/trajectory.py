@@ -1,0 +1,230 @@
+"""Perf-trajectory ledger + regression gate (analytic + probed, never wall).
+
+Every benchmark suite ends by calling :func:`check`: the suite's gated
+ratios (analytic traffic/peak ratios — the numbers the paper's argument
+rests on) plus ahead-of-time probe measurements (``obs.probe`` compiled
+byte counts) are
+
+1. **appended** to ``BENCH_trajectory.jsonl`` — one JSON object per
+   suite run, so the repo accumulates a perf trajectory across commits
+   and CI uploads the file as an artifact; and
+2. **gated** against ``benchmarks/trajectory_baseline.json`` — the
+   committed snapshot of where the numbers stood when the baseline was
+   seeded. A metric that regresses past its tolerance raises
+   ``SystemExit`` (CI goes red).
+
+Wall-clock is deliberately NOT a trajectory metric: this container's
+timings are ±40% noisy, and a gate that flakes teaches everyone to
+ignore it. Every gated quantity is either closed-form analytic (ledger
+ratios) or a compile-time observable (probe bytes — deterministic for a
+fixed jax/XLA version, so its tolerance band only needs to absorb
+compiler-version drift, not scheduler noise).
+
+Baseline schema — ``{metric: {"value": v, "direction": d, "tolerance": t}}``:
+
+* ``direction: "min"`` — the metric is a *win* (bigger is better, e.g.
+  a traffic-reduction ratio); fail when ``value < base * (1 - t)``;
+* ``direction: "max"`` — the metric is a *cost* (smaller is better,
+  e.g. probed bytes); fail when ``value > base * (1 + t)``.
+
+Metrics present in a run but absent from the baseline pass (new metrics
+are legal until the next reseed); baseline metrics absent from a run are
+ignored (suites gate only what they measured). Reseed with::
+
+    PYTHONPATH=src python -m benchmarks.trajectory --rebaseline
+
+which folds the newest value of every metric in the JSONL ledger into
+the baseline with the default direction/tolerance rules below.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+#: the append-only ledger (repo root; CI uploads it as an artifact)
+TRAJECTORY_PATH = "BENCH_trajectory.jsonl"
+#: the committed gate baseline (lives beside this module)
+BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                             "trajectory_baseline.json")
+
+#: default (direction, tolerance) when seeding a baseline entry.
+#: ``probe.*`` metrics are measured costs (compiled bytes / peak) and
+#: move only when the compiler does — but a jax upgrade can re-fuse
+#: entire loop bodies, so they get a wide band. Everything else is a
+#: win ratio from an exact closed form; 5% covers only size-rounding
+#: drift (padding, tile clamps) from tuning changes.
+_PROBE_RULE = ("max", 0.35)
+_DEFAULT_RULE = ("min", 0.05)
+
+
+def default_rule(metric: str):
+    """(direction, tolerance) for a metric name, by the rules above."""
+    return _PROBE_RULE if metric.startswith("probe.") else _DEFAULT_RULE
+
+
+# --------------------------------------------------------------------------
+# Flattening suite results into metric dicts
+# --------------------------------------------------------------------------
+def flatten(suite: str, results: dict) -> dict:
+    """Extract the gated scalars from a suite's return dict, keyed
+    ``<suite>.<metric>.n<size>`` so every geometry gates separately."""
+    out = {}
+    sized = {n: r for n, r in results.items() if isinstance(n, int)}
+    if suite == "mantel":
+        for n, r in sized.items():
+            out[f"mantel.ratio_vs_square_gather.n{n}"] = \
+                r["ratio_vs_square_gather"]
+            out[f"mantel.ratio_vs_original.n{n}"] = r["ratio_vs_original"]
+    elif suite == "api":
+        for n, r in sized.items():
+            out[f"api.traffic_ratio.n{n}"] = r["traffic_ratio"]
+    elif suite == "dist":
+        for n, r in sized.items():
+            out[f"dist.traffic_ratio.n{n}"] = r["traffic_ratio"]
+            out[f"dist.peak_ratio.n{n}"] = r["peak_ratio"]
+    elif suite == "tune":
+        for n, r in sized.items():
+            out[f"tune.worst_ratio.n{n}"] = min(
+                o["ratio"] for su in r["suites"].values()
+                for o in su.values())
+    elif suite == "serve":
+        for n, r in sized.items():
+            out[f"serve.tile_ratio.n{n}"] = r["tile_ratio"]
+            out[f"serve.traffic_ratio.n{n}"] = r["traffic_ratio"]
+    else:
+        raise ValueError(f"no trajectory extraction for suite {suite!r}")
+    return {k: float(v) for k, v in out.items()}
+
+
+def probe_metrics(n: int = 256, batch: int = 32, d: int = 32) -> dict:
+    """Compile-time measurements of the production entry points at one
+    fixed geometry — the measured half of the trajectory. Deterministic
+    per jax version (AOT compile, no execution)."""
+    from repro.obs.probe import (probe_panel_stats, probe_permute_reduce,
+                                 probe_stream_pass)
+
+    pr = probe_permute_reduce(n, batch=batch)
+    pan = probe_panel_stats(n, d)
+    stream = probe_stream_pass(1 << 22)
+    return {
+        f"probe.permute_reduce.bytes.n{n}": float(pr.bytes_corrected),
+        f"probe.permute_reduce.peak.n{n}": float(pr.peak_bytes),
+        f"probe.panel_stats.bytes.n{n}": float(pan.bytes_corrected),
+        f"probe.panel_stats.peak.n{n}": float(pan.peak_bytes),
+        "probe.stream_pass.bytes.n4194304": float(stream.bytes_corrected),
+    }
+
+
+# --------------------------------------------------------------------------
+# Ledger + gate
+# --------------------------------------------------------------------------
+def record(suite: str, metrics: dict, path: str = TRAJECTORY_PATH) -> dict:
+    """Append one trajectory entry; returns what was written."""
+    entry = {"suite": suite, "t": time.time(),
+             "jax": jax.__version__, "backend": jax.default_backend(),
+             "metrics": metrics}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
+
+
+def load_baseline(path: str = BASELINE_PATH) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate(metrics: dict, baseline: dict) -> list:
+    """Regressions as human-readable strings (empty == green)."""
+    failures = []
+    for name, value in metrics.items():
+        base = baseline.get(name)
+        if base is None:
+            continue
+        bv, tol = base["value"], base["tolerance"]
+        if base["direction"] == "min":
+            if value < bv * (1.0 - tol):
+                failures.append(
+                    f"{name}: {value:.6g} fell below baseline "
+                    f"{bv:.6g} - {tol:.0%} = {bv * (1 - tol):.6g}")
+        elif value > bv * (1.0 + tol):
+            failures.append(
+                f"{name}: {value:.6g} exceeded baseline "
+                f"{bv:.6g} + {tol:.0%} = {bv * (1 + tol):.6g}")
+    return failures
+
+
+def check(suite: str, results_or_metrics: dict, *,
+          path: str = TRAJECTORY_PATH,
+          baseline_path: str = BASELINE_PATH,
+          raise_on_failure: bool = True) -> list:
+    """Record + gate one suite run. ``results_or_metrics`` is either a
+    suite return dict (flattened here) or an already-flat metric dict
+    (every key contains a dot). Raises ``SystemExit`` on regression."""
+    if all("." in str(k) for k in results_or_metrics):
+        metrics = dict(results_or_metrics)
+    else:
+        metrics = flatten(suite, results_or_metrics)
+    record(suite, metrics, path=path)
+    failures = gate(metrics, load_baseline(baseline_path))
+    for f in failures:
+        print(f"# TRAJECTORY REGRESSION: {f}")
+    if failures and raise_on_failure:
+        raise SystemExit(
+            f"trajectory gate: {len(failures)} metric(s) regressed past "
+            f"tolerance (see above; reseed with "
+            f"`python -m benchmarks.trajectory --rebaseline` only if the "
+            f"change is intended)")
+    if not failures:
+        gated = sum(1 for k in metrics if k in load_baseline(baseline_path))
+        print(f"# trajectory: {suite} appended {len(metrics)} metric(s), "
+              f"{gated} gated against baseline — green")
+    return failures
+
+
+def rebaseline(path: str = TRAJECTORY_PATH,
+               baseline_path: str = BASELINE_PATH) -> dict:
+    """Fold the newest value of every metric in the JSONL ledger into
+    the baseline (defaults for direction/tolerance; existing entries
+    keep their direction/tolerance and only refresh the value)."""
+    old = load_baseline(baseline_path)
+    latest = {}
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                latest.update(json.loads(line)["metrics"])
+    base = {}
+    for name, value in sorted(latest.items()):
+        direction, tol = default_rule(name)
+        prev = old.get(name, {})
+        base[name] = {"value": value,
+                      "direction": prev.get("direction", direction),
+                      "tolerance": prev.get("tolerance", tol)}
+    with open(baseline_path, "w") as f:
+        json.dump(base, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# baseline reseeded: {len(base)} metric(s) -> {baseline_path}")
+    return base
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="fold the newest JSONL values into the baseline")
+    ap.add_argument("--trajectory", default=TRAJECTORY_PATH)
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args()
+    if args.rebaseline:
+        rebaseline(args.trajectory, args.baseline)
+        return
+    ap.error("nothing to do (pass --rebaseline)")
+
+
+if __name__ == "__main__":
+    main()

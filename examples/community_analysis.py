@@ -171,6 +171,27 @@ def main(n: int = 2048, permutations: int = 999):
           f"{ {k: v['programs'] for k, v in report.compile.items()} } "
           f"(one kernels.permute_reduce program per invariant-stack "
           f"shape, whatever K) ==")
+
+    # -- measured vs modeled: the compiled programs' actual byte counts
+    # (obs.probe, ahead-of-time compile, scan-corrected) reconciled
+    # against the analytic envelope (obs.drift)
+    if report.measured:
+        print("\n== measured (AOT probes, scan-corrected bytes) ==")
+        for name, rec in sorted(report.measured.items()):
+            print(f"   {name:26s} {rec['bytes_corrected'] / 1e6:10.2f} MB "
+                  f"moved, peak {rec['peak_bytes'] / 1e6:8.2f} MB")
+        print(f"== drift verdicts (measured inside the modeled "
+              f"envelope?) ==")
+        for v in report.drift["verdicts"]:
+            print(f"   {v['name']:26s} {v['quantity']:5s} "
+                  f"{v['measured'] / 1e6:10.2f} MB in "
+                  f"[{v['expected_lo'] / 1e6:.2f}, "
+                  f"{v['expected_hi'] / 1e6:.2f}] "
+                  f"{'OK' if v['within'] else 'DRIFT'}  ({v['regime']})")
+        verdict = ("within tolerance" if report.drift_ok
+                   else "DRIFT DETECTED")
+        print(f"== drift: {verdict} on backend "
+              f"{report.drift['backend']} ==")
     return r
 
 

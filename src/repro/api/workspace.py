@@ -443,8 +443,15 @@ class Workspace:
             base["tune"] = self.tuned.to_dict()
         if meta:
             base.update(meta)
+        measured = drift = None
+        if self._obs.enabled and self.config.obs.probe:
+            from repro.obs.drift import DriftSentinel
+            from repro.obs.probe import probe_session
+            measured = probe_session(self)
+            drift = DriftSentinel().reconcile(measured)
         return build_report(self._obs if self._obs.enabled else None,
-                            cache=self.cache, meta=base)
+                            cache=self.cache, meta=base,
+                            measured=measured, drift=drift)
 
     # -- canonical views ----------------------------------------------------
     @property

@@ -1,206 +1,31 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""RETIRED: the multi-pod dry-run is superseded by ``repro.obs.probe``.
 
-"""Multi-pod dry-run (harness deliverable (e)).
+This entry point compiled every (architecture × input shape) cell of the
+old token-model harness on simulated 512-device meshes and recorded
+``cost_analysis()`` / ``memory_analysis()`` per cell. Two things made it
+dead weight:
 
-Lowers + compiles every (architecture × input shape) cell on the
-single-pod (16, 16) and multi-pod (2, 16, 16) production meshes, records
-``memory_analysis()`` / ``cost_analysis()`` / parsed collective bytes /
-analytic roofline terms, and appends each cell to a resumable JSON.
+* the cells it enumerated belonged to the seed-era language-model
+  harness, not the beta-diversity stack this repo now reproduces — none
+  of its compiled programs are the programs the paper's pipeline runs;
+* its measurement idea — compile ahead-of-time, read the compiled
+  program's costs instead of the wall clock — was the right one, and it
+  now lives where the real entry points are: ``repro.obs.probe`` lowers
+  the *production* jitted programs (``kernels.permute_reduce``,
+  ``dist.panel_stats``, the stats engine, the matrix-free PCoA) against
+  symbolic avals and returns scan-corrected byte counts, flops, and peak
+  memory per program. ``repro.obs.drift`` reconciles those measurements
+  against the analytic ledger / cost models, and ``Workspace.report()``
+  carries the verdicts.
 
-The XLA_FLAGS line above MUST stay the first statement — jax locks the
-device count at first init (harness MULTI-POD DRY-RUN §0). Only this
-entry point sets it; tests and benchmarks see the real device.
+For the measurement surface this module used to provide::
 
-Usage:
-    PYTHONPATH=src python -m repro.launch.dryrun               # all cells
-    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
-        --shape train_4k --mesh single
-    PYTHONPATH=src python -m repro.launch.dryrun --list
+    from repro.obs.probe import probe_session, probe_table
+    records = probe_session(workspace)   # one ProbeRecord per entry point
+    print(probe_table(records))
+
+Nothing is exported; importing this module is harmless (it no longer
+touches ``XLA_FLAGS`` or device state — the 512-device override died
+with the dry-run, and ``tests/conftest.py`` documents that tests see
+the real device).
 """
-
-import argparse
-import json
-import time
-import traceback
-
-import jax
-
-from repro.configs import ARCHS, SHAPES
-from repro.launch.inputs import input_specs
-from repro.launch.mesh import make_production_mesh, mesh_chips
-from repro.optim.adamw import AdamWConfig
-from repro.roofline.hlo import collective_bytes_per_device
-from repro.roofline.model import step_costs
-from repro.roofline.terms import roofline_terms
-from repro.runtime.serve import make_decode_step, make_prefill_step
-from repro.runtime.train import abstract_train_state, make_train_step
-from repro.sharding.rules import make_rules
-
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                           "results")
-
-
-def cell_list():
-    cells = []
-    for arch, cfg in ARCHS.items():
-        for sname, shape in SHAPES.items():
-            if not cfg.supports_shape(shape):
-                continue
-            cells.append((arch, sname))
-    return cells
-
-
-def lower_cell(cfg, shape, mesh):
-    """→ (lowered, compiled) for the cell's step function."""
-    rules = make_rules(mesh)
-    with mesh:
-        if shape.kind == "train":
-            params, opt_state = abstract_train_state(cfg)
-            batch = input_specs(cfg, shape)
-            step = make_train_step(cfg, AdamWConfig(), mesh, rules,
-                                   params, opt_state, batch)
-            lowered = step.lower(params, opt_state, batch)
-        elif shape.kind == "prefill":
-            params, _ = abstract_train_state(cfg)
-            batch = input_specs(cfg, shape)
-            step = make_prefill_step(cfg, mesh, rules, params, batch,
-                                     max_len=shape.seq_len)
-            lowered = step.lower(params, batch)
-        else:
-            params, _ = abstract_train_state(cfg)
-            token, cache = input_specs(cfg, shape)
-            step = make_decode_step(cfg, mesh, rules, params, cache)
-            lowered = step.lower(params, token, cache)
-        compiled = lowered.compile()
-    return lowered, compiled
-
-
-def analyze_cell(arch: str, sname: str, mesh_name: str, mesh) -> dict:
-    cfg = ARCHS[arch]
-    shape = SHAPES[sname]
-    chips = mesh_chips(mesh)
-    rec = {"arch": arch, "shape": sname, "mesh": mesh_name, "chips": chips}
-
-    t0 = time.time()
-    lowered, compiled = lower_cell(cfg, shape, mesh)
-    rec["compile_s"] = round(time.time() - t0, 1)
-
-    ma = compiled.memory_analysis()
-    rec["memory_analysis"] = {
-        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
-        "output_bytes_per_device": int(ma.output_size_in_bytes),
-        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
-        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
-        "peak_bytes_per_device": int(ma.argument_size_in_bytes
-                                     + ma.temp_size_in_bytes
-                                     + ma.output_size_in_bytes
-                                     - ma.alias_size_in_bytes),
-    }
-    print(f"  memory_analysis: {ma}")
-
-    ca = compiled.cost_analysis()
-    if isinstance(ca, list):
-        ca = ca[0]
-    ca = ca or {}
-    rec["cost_analysis_raw"] = {
-        "flops": float(ca.get("flops", 0.0)),
-        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
-        "note": "scan bodies counted once by XLA (see EXPERIMENTS §Method)",
-    }
-    print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
-          f"bytes={ca.get('bytes accessed', 0):.3e}")
-
-    hlo = compiled.as_text()
-    coll = collective_bytes_per_device(hlo, chips)
-    rec["collectives"] = coll
-    rec["hlo_bytes"] = len(hlo)
-
-    # CPU-host compile artifact: f32 shadow copies of bf16 while-carries
-    # (bf16-dot emulation). Absent on TPU — record and adjust (§Method).
-    from repro.roofline.hlo import cpu_bf16_carry_artifact_bytes
-    artifact = cpu_bf16_carry_artifact_bytes(hlo)
-    rec["cpu_bf16_artifact_bytes"] = int(artifact)
-    rec["memory_analysis"]["peak_adjusted_bytes_per_device"] = int(
-        rec["memory_analysis"]["peak_bytes_per_device"] - artifact)
-
-    cost = step_costs(cfg, shape, chips)
-    rec["analytic"] = {
-        "flops_executed": cost.flops_executed,
-        "flops_model": cost.flops_model,
-        "bytes_hbm_per_device": cost.bytes_hbm_per_device,
-        "params_total": cost.params_total,
-        **{f"detail_{k}": v for k, v in cost.breakdown.items()},
-    }
-    terms = roofline_terms(cost.flops_executed, cost.flops_model,
-                           cost.bytes_hbm_per_device,
-                           coll.get("total", 0), chips)
-    rec["roofline"] = terms.as_dict()
-    print(f"  roofline: compute={terms.compute_s:.4f}s "
-          f"memory={terms.memory_s:.4f}s collective={terms.collective_s:.4f}s"
-          f" dominant={terms.dominant} mfu_bound={terms.mfu_bound:.3f}")
-    return rec
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    ap.add_argument("--mesh", default="both", choices=["single", "multi",
-                                                       "both"])
-    ap.add_argument("--out", default=None)
-    ap.add_argument("--list", action="store_true")
-    ap.add_argument("--force", action="store_true",
-                    help="recompute cells already in the results file")
-    args = ap.parse_args()
-
-    cells = cell_list()
-    if args.arch:
-        cells = [c for c in cells if c[0] == args.arch]
-    if args.shape:
-        cells = [c for c in cells if c[1] == args.shape]
-    if args.list:
-        for c in cells:
-            print(f"{c[0]} × {c[1]}")
-        print(f"{len(cells)} runnable cells "
-              f"(+ skips documented in DESIGN §Arch-applicability)")
-        return
-
-    meshes = []
-    if args.mesh in ("single", "both"):
-        meshes.append(("single_pod_16x16", make_production_mesh()))
-    if args.mesh in ("multi", "both"):
-        meshes.append(("multi_pod_2x16x16",
-                       make_production_mesh(multi_pod=True)))
-
-    out_dir = args.out or os.path.abspath(RESULTS_DIR)
-    os.makedirs(out_dir, exist_ok=True)
-
-    for mesh_name, mesh in meshes:
-        out_path = os.path.join(out_dir, f"dryrun_{mesh_name}.json")
-        results = {}
-        if os.path.exists(out_path):
-            with open(out_path) as f:
-                results = json.load(f)
-        for arch, sname in cells:
-            key = f"{arch}/{sname}"
-            if key in results and not args.force \
-                    and "error" not in results[key]:
-                print(f"[skip] {key} on {mesh_name} (cached)")
-                continue
-            print(f"[cell] {key} on {mesh_name}")
-            try:
-                results[key] = analyze_cell(arch, sname, mesh_name, mesh)
-            except Exception as e:
-                traceback.print_exc()
-                results[key] = {"arch": arch, "shape": sname,
-                                "mesh": mesh_name,
-                                "error": f"{type(e).__name__}: {e}"}
-            with open(out_path, "w") as f:
-                json.dump(results, f, indent=1)
-        ok = sum(1 for v in results.values() if "error" not in v)
-        print(f"[done] {mesh_name}: {ok}/{len(results)} cells OK → {out_path}")
-
-
-if __name__ == "__main__":
-    main()

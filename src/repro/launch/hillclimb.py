@@ -1,161 +1,25 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""RETIRED: the variant hillclimb is superseded by ``repro.tune``.
 
-"""§Perf hillclimb runner: compile a cell under config/sharding VARIANTS
-and record the three roofline terms for each — the measure step of the
-hypothesis → change → measure loop (EXPERIMENTS.md §Perf Part B).
+This runner compiled one seed-era model cell under hand-listed config /
+sharding variants and recorded the three roofline terms for each — the
+measure step of a manual hypothesis → change → measure loop. The repo
+grew principled replacements for both halves of that loop:
 
-    PYTHONPATH=src python -m repro.launch.hillclimb \
-        --arch qwen3-8b --shape train_4k --mesh single \
-        --variant name=dp_tp fsdp=0 \
-        --variant name=dp_tp_nosp fsdp=0 seq_shard_activations=0
+* *choosing* variants is now ``repro.tune``'s job: ``tune.model`` prices
+  every legal tile size analytically and ``tune.search`` picks the
+  winner per backend — no hand-listed variant files;
+* *measuring* a choice is now ``repro.obs.probe`` (ahead-of-time
+  compilation of the production entry points, scan-corrected byte
+  counts) plus ``repro.obs.drift``, which reconciles measurement against
+  the cost model and flags any configuration whose compiled traffic
+  leaves the modeled envelope — the regression the hillclimb watched
+  for by eye.
 
-Each --variant is a space-separated k=v list; keys are ModelConfig fields
-(plus the special 'fsdp' and 'name'). Results append to
-results/hillclimb_<arch>_<shape>.json.
+The probe-backed calibration the hillclimb never had::
+
+    from repro.tune.budget import calibrate
+    budget = calibrate(mode="probe")     # deterministic, clock-free
+
+Nothing is exported; importing this module is harmless (it no longer
+sets ``XLA_FLAGS`` or imports the retired dry-run).
 """
-
-import argparse
-import dataclasses
-import json
-
-import jax
-
-from repro.configs import ARCHS, SHAPES
-from repro.launch import dryrun as dr
-from repro.launch.mesh import make_production_mesh, mesh_chips
-
-
-def parse_variant(tokens):
-    out = {}
-    for t in tokens:
-        k, v = t.split("=", 1)
-        out[k] = v
-    return out
-
-
-def apply_variant(cfg, variant: dict):
-    fields = {f.name: f.type for f in dataclasses.fields(cfg)}
-    updates = {}
-    for k, v in variant.items():
-        if k in ("name", "fsdp", "zero1"):
-            continue
-        if k not in fields:
-            raise KeyError(f"unknown config field {k}")
-        cur = getattr(cfg, k)
-        if isinstance(cur, bool):
-            updates[k] = v not in ("0", "false", "False")
-        elif isinstance(cur, int):
-            updates[k] = int(v)
-        elif isinstance(cur, float):
-            updates[k] = float(v)
-        else:
-            updates[k] = v
-    return dataclasses.replace(cfg, **updates)
-
-
-def run_variant(arch: str, sname: str, mesh_name: str, mesh, variant: dict):
-    from repro.sharding.rules import make_rules
-    cfg = apply_variant(ARCHS[arch], variant)
-    fsdp = variant.get("fsdp", "1") not in ("0", "false", "False")
-
-    # monkey-patchless: dryrun.lower_cell builds rules itself, so inline
-    # the same flow with our rules here.
-    import time
-    from repro.launch.inputs import input_specs
-    from repro.optim.adamw import AdamWConfig
-    from repro.runtime.serve import make_decode_step, make_prefill_step
-    from repro.runtime.train import abstract_train_state, make_train_step
-
-    shape = SHAPES[sname]
-    rules = make_rules(mesh, fsdp=fsdp)
-    zero1 = variant.get("zero1", "0") not in ("0", "false", "False")
-    opt_rules = make_rules(mesh, fsdp=True) if zero1 else None
-    t0 = time.time()
-    with mesh:
-        if shape.kind == "train":
-            params, opt_state = abstract_train_state(cfg)
-            batch = input_specs(cfg, shape)
-            step = make_train_step(cfg, AdamWConfig(), mesh, rules, params,
-                                   opt_state, batch, opt_rules=opt_rules)
-            compiled = step.lower(params, opt_state, batch).compile()
-        elif shape.kind == "prefill":
-            params, _ = abstract_train_state(cfg)
-            batch = input_specs(cfg, shape)
-            step = make_prefill_step(cfg, mesh, rules, params, batch,
-                                     max_len=shape.seq_len)
-            compiled = step.lower(params, batch).compile()
-        else:
-            params, _ = abstract_train_state(cfg)
-            token, cache = input_specs(cfg, shape)
-            step = make_decode_step(cfg, mesh, rules, params, cache)
-            compiled = step.lower(params, token, cache).compile()
-
-    from repro.roofline.hlo import (collective_bytes_per_device,
-                                    cpu_bf16_carry_artifact_bytes)
-    from repro.roofline.model import step_costs
-    from repro.roofline.terms import roofline_terms
-
-    chips = mesh_chips(mesh)
-    ma = compiled.memory_analysis()
-    hlo = compiled.as_text()
-    coll = collective_bytes_per_device(hlo, chips)
-    artifact = cpu_bf16_carry_artifact_bytes(hlo)
-    cost = step_costs(cfg, shape, chips)
-    terms = roofline_terms(cost.flops_executed, cost.flops_model,
-                           cost.bytes_hbm_per_device, coll.get("total", 0),
-                           chips)
-    rec = {
-        "variant": variant.get("name", "variant"),
-        "overrides": variant,
-        "mesh": mesh_name,
-        "compile_s": round(time.time() - t0, 1),
-        "collective_bytes": coll,
-        "peak_bytes": int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
-                          + ma.output_size_in_bytes
-                          - ma.alias_size_in_bytes),
-        "peak_adjusted": int(ma.argument_size_in_bytes
-                             + ma.temp_size_in_bytes
-                             + ma.output_size_in_bytes
-                             - ma.alias_size_in_bytes - artifact),
-        "roofline": terms.as_dict(),
-    }
-    print(f"[{rec['variant']:16s}] compute={terms.compute_s:.4f}s "
-          f"memory={terms.memory_s:.4f}s collective={terms.collective_s:.4f}s"
-          f" dominant={terms.dominant} mfu={terms.mfu_bound:.3f} "
-          f"peak_adj={rec['peak_adjusted'] / 1e9:.1f}GB "
-          f"wire={coll.get('total', 0) / 1e9:.1f}GB")
-    return rec
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--variant", nargs="+", action="append", required=True)
-    ap.add_argument("--out", default="results")
-    args = ap.parse_args()
-
-    mesh_name = ("multi_pod_2x16x16" if args.mesh == "multi"
-                 else "single_pod_16x16")
-    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
-
-    out_path = os.path.join(args.out,
-                            f"hillclimb_{args.arch}_{args.shape}.json")
-    recs = []
-    if os.path.exists(out_path):
-        with open(out_path) as f:
-            recs = json.load(f)
-    for v in args.variant:
-        variant = parse_variant(v)
-        recs = [r for r in recs if not (r["variant"] == variant.get("name")
-                                        and r["mesh"] == mesh_name)]
-        recs.append(run_variant(args.arch, args.shape, mesh_name, mesh,
-                                variant))
-        with open(out_path, "w") as f:
-            json.dump(recs, f, indent=1)
-
-
-if __name__ == "__main__":
-    main()

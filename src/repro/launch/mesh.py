@@ -1,11 +1,14 @@
 """Production mesh construction (harness spec, MULTI-POD DRY-RUN §1).
 
 ``make_production_mesh`` is a FUNCTION — importing this module never
-touches jax device state. Callers (dryrun.py) are responsible for setting
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import; smoke tests and benchmarks see the real single device.
+touches jax device state. Any caller that wants a simulated multi-pod
+mesh must set ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before the first jax import; smoke tests and benchmarks see the real
+single device. (The retired ``launch.dryrun`` was the last such caller;
+nothing in-tree sets the override today.)
 
-Hardware model (TPU v5e targets, used by the roofline):
+Hardware model (TPU v5e targets; ``HBM_BW`` is also the bandwidth
+column of ``tune.budget``'s static TPU budget):
     197 TFLOP/s bf16 / chip · 819 GB/s HBM · ~50 GB/s/link ICI.
 """
 
@@ -13,7 +16,7 @@ from __future__ import annotations
 
 import jax
 
-# v5e constants for the roofline (per chip)
+# v5e constants (per chip)
 PEAK_FLOPS = 197e12        # bf16
 HBM_BW = 819e9             # bytes/s
 ICI_BW = 50e9              # bytes/s per link

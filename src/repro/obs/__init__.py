@@ -1,6 +1,6 @@
 """repro.obs — always-on observability for the analysis stack.
 
-Four pieces, one discipline ("profile first, then trust the model" —
+Seven pieces, one discipline ("profile first, then trust the model" —
 the SSD-profiling study's rule, applied to our own runtime):
 
 * ``obs.trace``   — nested span tracer with phase tags
@@ -14,7 +14,16 @@ the SSD-profiling study's rule, applied to our own runtime):
   per wrapped entry point, with a runtime guard for the "one trace
   serves any K" invariant;
 * ``obs.report``  — ``ObsSession`` (one run's tracer+ledger+sentinel
-  window) and ``RunReport`` (the one-JSON-per-run artifact CI uploads).
+  window) and ``RunReport`` (the one-JSON-per-run artifact CI uploads);
+* ``obs.probe``   — the MEASURED half: AOT-compiled flop/byte/peak
+  counts per jitted entry point (``cost_analysis`` + ``memory_analysis``
+  + scan-corrected HLO byte counting, absorbed from the retired
+  ``repro.roofline``);
+* ``obs.drift``   — the ``DriftSentinel`` reconciling measured probes
+  against the ledger/tune models with per-backend tolerance bands;
+* ``obs.metrics`` — allocation-light ``Counter``/``Gauge``/``Histogram``
+  primitives (JSON + Prometheus text export) behind the serve latency
+  percentiles and the step monitor.
 
 Enable per session via ``ExecConfig(obs=ObsConfig(enabled=True))``;
 read the result with ``Workspace.report()``.
@@ -23,9 +32,14 @@ read the result with ``Workspace.report()``.
 from repro.obs.compile import (CompileSentinel, RecompileError, note_trace,
                                sentinel)
 from repro.obs.config import ObsConfig
+from repro.obs.drift import DriftSentinel, DriftVerdict
 from repro.obs.ledger import (FEATURE_HOIST_PASSES, HOIST_PASSES, Ledger,
                               LedgerEntry, hoist_floats, perm_traffic_floats,
                               production_floats)
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, NULL_HISTOGRAM,
+                               Counter, Gauge, Histogram, prometheus_text)
+from repro.obs.probe import (ProbeRecord, probe_lowered, probe_session,
+                             probe_table, scan_corrected_bytes)
 from repro.obs.report import ObsSession, RunReport, build_report
 from repro.obs.trace import (NULL_OBS, NULL_SPAN, PHASES, Span, Tracer,
                              current_obs)
@@ -33,8 +47,13 @@ from repro.obs.trace import (NULL_OBS, NULL_SPAN, PHASES, Span, Tracer,
 __all__ = [
     "CompileSentinel", "RecompileError", "note_trace", "sentinel",
     "ObsConfig",
+    "DriftSentinel", "DriftVerdict",
     "FEATURE_HOIST_PASSES", "HOIST_PASSES", "Ledger", "LedgerEntry",
     "hoist_floats", "perm_traffic_floats", "production_floats",
+    "DEFAULT_LATENCY_BUCKETS", "NULL_HISTOGRAM", "Counter", "Gauge",
+    "Histogram", "prometheus_text",
+    "ProbeRecord", "probe_lowered", "probe_session", "probe_table",
+    "scan_corrected_bytes",
     "ObsSession", "RunReport", "build_report",
     "NULL_OBS", "NULL_SPAN", "PHASES", "Span", "Tracer", "current_obs",
 ]

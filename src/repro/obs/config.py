@@ -45,15 +45,24 @@ class ObsConfig:
         line up inside XLA profiles (Perfetto / TensorBoard). Off by
         default: it adds a profiler call per span even when no profile
         is being taken.
+    probe:
+        Measure the session's jitted entry points at report time
+        (``obs.probe``: AOT-compiled flop/byte/peak counts) and
+        reconcile them against the analytic models (``obs.drift``) into
+        the report's ``measured`` and ``drift`` sections. Probing is
+        compile-time-only work at report() — nothing on the execution
+        hot path — but it does cost a few ahead-of-time compiles per
+        session geometry, so it follows the master switch.
     """
 
     enabled: bool = False
     spans: bool = True
     ledger: bool = True
     annotate_xla: bool = False
+    probe: bool = True
 
     def __post_init__(self):
-        for f in ("enabled", "spans", "ledger", "annotate_xla"):
+        for f in ("enabled", "spans", "ledger", "annotate_xla", "probe"):
             v = getattr(self, f)
             if not isinstance(v, bool):
                 raise ValueError(f"ObsConfig.{f} must be a bool, "

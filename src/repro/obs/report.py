@@ -89,11 +89,14 @@ class RunReport:
     ledger: dict
     cache: dict
     compile: dict
+    measured: dict = dataclasses.field(default_factory=dict)
+    drift: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {"meta": self.meta, "spans": self.spans,
                 "ledger": self.ledger, "cache": self.cache,
-                "compile": self.compile}
+                "compile": self.compile, "measured": self.measured,
+                "drift": self.drift}
 
     def to_json(self, indent: Optional[int] = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent, default=str)
@@ -115,6 +118,12 @@ class RunReport:
     def programs(self, name: str) -> int:
         return self.compile.get(name, {}).get("programs", 0)
 
+    @property
+    def drift_ok(self) -> bool:
+        """True when the drift section is absent OR every reconciled
+        verdict landed inside its tolerance band."""
+        return bool(self.drift.get("within_tolerance", True))
+
 
 def _cache_section(cache) -> dict:
     """A HoistCache, stringified for JSON (tuple keys become strings)."""
@@ -128,23 +137,36 @@ def _cache_section(cache) -> dict:
 
 
 def build_report(session: Optional[ObsSession] = None, cache=None,
-                 meta: Optional[dict] = None) -> RunReport:
+                 meta: Optional[dict] = None,
+                 measured: Optional[dict] = None,
+                 drift: Optional[dict] = None) -> RunReport:
     """Assemble a ``RunReport`` from a session (tracer + ledger +
     sentinel window) and an optional HoistCache. With ``session=None``
     (observability disabled) the report still carries the cache
     counters and the sentinel's full process snapshot — the always-on
-    telemetry — with empty spans and ledger."""
+    telemetry — with empty spans and ledger.
+
+    ``measured`` is a ``{name: ProbeRecord}`` mapping from
+    ``obs.probe.probe_session`` (serialized here); ``drift`` the
+    already-built ``DriftSentinel.reconcile`` section."""
     import jax
 
     base_meta = {"jax": jax.__version__, "backend": jax.default_backend()}
     if meta:
         base_meta.update(meta)
+    measured_section = {name: (rec.to_dict() if hasattr(rec, "to_dict")
+                               else dict(rec))
+                        for name, rec in (measured or {}).items()}
     if session is not None:
         return RunReport(meta=base_meta,
                          spans=session.tracer.to_dicts(),
                          ledger=session.ledger.to_dict(),
                          cache=_cache_section(cache),
-                         compile=session.compile_delta())
+                         compile=session.compile_delta(),
+                         measured=measured_section,
+                         drift=dict(drift or {}))
     return RunReport(meta=base_meta, spans=[], ledger={},
                      cache=_cache_section(cache),
-                     compile=sentinel.snapshot())
+                     compile=sentinel.snapshot(),
+                     measured=measured_section,
+                     drift=dict(drift or {}))

@@ -10,7 +10,7 @@ monitor implements the detection half that any TPU-pod runner needs:
 * a deadline watchdog: a callable heartbeat that raises after
   ``deadline_factor × median`` so the launcher can checkpoint + evict
   (the eviction itself is the cluster scheduler's job);
-* per-step records exportable for the roofline/§Perf logs.
+* per-step records exportable for the perf logs.
 
 Since the ``repro.obs`` subsystem the monitor is refolded on the span
 stream: every step is a ``phase="step"`` span on an ``obs.trace.Tracer``
@@ -141,11 +141,25 @@ class StepMonitor:
                 f"{self.deadline():.1f}s) — checkpoint and evict")
 
     def summary(self) -> dict:
+        """Step-time distribution: exact median/p90 (kept for
+        compatibility with earlier reports) plus p50/p95/p99 estimated
+        through a fixed-bucket ``obs.metrics.Histogram`` — the same
+        primitive the serve latency metrics use, so a monitor folded
+        into ``serve_report()`` speaks the same percentile dialect."""
+        from repro.obs.metrics import Histogram
+
         secs = [s.duration for s in self._spans]
+        hist = Histogram("step_seconds")
+        for s in secs:
+            hist.record(s)
+        pct = hist.percentiles()
         return {
             "steps": len(secs),
             "median_s": self.median,
             "p90_s": (statistics.quantiles(secs, n=10)[-1]
                       if len(secs) >= 10 else max(secs, default=float("nan"))),
+            "p50_s": pct.get("p50"),
+            "p95_s": pct.get("p95"),
+            "p99_s": pct.get("p99"),
             "stragglers": len(self.stragglers()),
         }

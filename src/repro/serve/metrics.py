@@ -7,46 +7,83 @@ never as live overlapping spans. Per-study analytic costs (hoist
 charges, per-tile permutation traffic) ride each pooled Workspace's own
 ``ObsSession`` ledger — the same audited terms as the library engine —
 and ``serve_report()`` folds both together with the pool, queue, and
-watchdog state into one service-level document:
+watchdog state into one service-level document.
+
+Latency *distributions* ride ``obs.metrics.Histogram`` — fixed
+log-spaced buckets, O(1) memory however long the service runs (the old
+unbounded ``latencies`` list was a slow leak with a reporting API) —
+one histogram each for queue wait (submit → activation), tile execution
+(the scheduler's StepMonitor stopwatch), and end-to-end request latency
+(submit → completion). Each may carry an SLO threshold from
+``ServeConfig``; samples past it tick a breach ``Counter``. The report
+carries p50/p95/p99 per distribution, and ``ServeMetrics.prometheus()``
+renders the whole set as Prometheus text exposition for scraping.
 
 * gauges — queue depth, active/admitted/completed/rejected counts,
   throughput (completed per second of service uptime), latency
   quantiles;
+* latency — the three histograms' percentiles; slo — thresholds +
+  breach counts;
 * pool — sessions, per-study resident hoist bytes, evictions;
 * scheduler — tiles executed, rows per tile, live lanes;
 * studies — each pooled session's ledger totals + HoistCache counters
   (so "hoists charged once per study, not per request" is a readable
   fact, and the per-study ``RunReport`` remains available via
   ``Workspace.report()``);
-* monitor — the ``StepMonitor`` summary (tile medians, stragglers).
+* monitor — the ``StepMonitor`` summary (tile medians, p50/p95/p99,
+  stragglers).
 """
 
 from __future__ import annotations
 
-import statistics
 import time
-from collections import Counter
+from collections import Counter as TallyCounter
+from typing import Optional
 
+from repro.obs.metrics import Counter, Histogram, prometheus_text
 from repro.obs.trace import Tracer
+
+#: histogram name -> ServeConfig threshold attribute
+_SLO_FIELDS = {"queue_wait": "slo_queue_wait_s",
+               "tile": "slo_tile_s",
+               "request": "slo_request_s"}
 
 
 class ServeMetrics:
-    """Counters + gauges + a pre-timed span stream for one service."""
+    """Counters + histograms + a pre-timed span stream for one service.
 
-    def __init__(self):
+    ``slo`` maps histogram names (``queue_wait`` / ``tile`` /
+    ``request``) to threshold seconds; a recorded sample past its
+    threshold increments the matching breach counter.
+    """
+
+    def __init__(self, slo: Optional[dict] = None):
         self.tracer = Tracer()
         self.t0 = time.perf_counter()
         self.admitted = 0          # requests accepted into the queue
         self.uploads = 0
         self.completed = 0
-        self.rejections = Counter()   # code -> count (timeouts included)
+        self.rejections = TallyCounter()  # code -> count (timeouts too)
         self.tiles = 0
         self.tile_rows = 0
         self.tile_parts = 0
-        self.latencies: list = []
         self.queue_depth = 0
+        self.slo = {k: v for k, v in (slo or {}).items() if v is not None}
+        self.hist = {
+            "queue_wait": Histogram("serve_queue_wait_seconds"),
+            "tile": Histogram("serve_tile_seconds"),
+            "request": Histogram("serve_request_seconds"),
+        }
+        self.breaches = {name: Counter(f"serve_slo_breach_{name}_total")
+                         for name in self.hist}
 
     # -- recording ---------------------------------------------------------
+    def _observe(self, name: str, seconds: float) -> None:
+        self.hist[name].record(seconds)
+        limit = self.slo.get(name)
+        if limit is not None and seconds > limit:
+            self.breaches[name].inc()
+
     def record_upload(self, study_id: str, n: int, seconds: float) -> None:
         self.uploads += 1
         self.tracer.record(f"upload:{study_id}", seconds, phase="serve",
@@ -58,17 +95,24 @@ class ServeMetrics:
     def record_rejection(self, code: str) -> None:
         self.rejections[code] += 1
 
-    def record_tile(self, rows: int, parts: int) -> None:
+    def record_queue_wait(self, seconds: float) -> None:
+        """Submit → activation delay for one request."""
+        self._observe("queue_wait", seconds)
+
+    def record_tile(self, rows: int, parts: int,
+                    seconds: Optional[float] = None) -> None:
         self.tiles += 1
         self.tile_rows += rows
         self.tile_parts += parts
+        if seconds is not None:
+            self._observe("tile", seconds)
 
     def record_completion(self, handle, seconds: float) -> None:
-        """A finished request: latency gauge + one pre-timed serve span
-        (requests overlap, so live spans would corrupt the tracer's
+        """A finished request: latency histogram + one pre-timed serve
+        span (requests overlap, so live spans would corrupt the tracer's
         nesting stack — ``record`` appends without opening one)."""
         self.completed += 1
-        self.latencies.append(seconds)
+        self._observe("request", seconds)
         self.tracer.record(f"request:{handle.method}", seconds,
                            phase="serve", request_id=handle.request_id,
                            study=handle.study_id,
@@ -80,9 +124,7 @@ class ServeMetrics:
     # -- gauges ------------------------------------------------------------
     def gauges(self) -> dict:
         uptime = time.perf_counter() - self.t0
-        lat = sorted(self.latencies)
-        q = (lambda f: lat[min(len(lat) - 1, int(f * len(lat)))]
-             ) if lat else (lambda f: None)
+        req = self.hist["request"]
         return {
             "uptime_s": uptime,
             "queue_depth": self.queue_depth,
@@ -92,14 +134,30 @@ class ServeMetrics:
             "rejected": dict(self.rejections),
             "throughput_rps": (self.completed / uptime) if uptime else 0.0,
             "latency_s": {
-                "median": statistics.median(lat) if lat else None,
-                "p90": q(0.9), "max": lat[-1] if lat else None,
+                "median": req.quantile(0.5),
+                "p90": req.quantile(0.9),
+                "max": req.max if req.count else None,
             },
             "rows_per_tile": (self.tile_rows / self.tiles
                               if self.tiles else None),
             "requests_per_tile": (self.tile_parts / self.tiles
                                   if self.tiles else None),
         }
+
+    def latency(self) -> dict:
+        """p50/p95/p99 (+count/mean/max) per latency distribution."""
+        return {f"{name}_s": h.percentiles()
+                for name, h in self.hist.items()}
+
+    def slo_report(self) -> dict:
+        return {"thresholds_s": dict(self.slo),
+                "breaches": {name: c.value
+                             for name, c in self.breaches.items()}}
+
+    def prometheus(self) -> str:
+        """The full metric set as Prometheus text exposition."""
+        return prometheus_text(list(self.hist.values()) +
+                               list(self.breaches.values()))
 
 
 def serve_report(service) -> dict:
@@ -118,6 +176,8 @@ def serve_report(service) -> dict:
         }
     return {
         "gauges": service.metrics.gauges(),
+        "latency": service.metrics.latency(),
+        "slo": service.metrics.slo_report(),
         "pool": {
             "sessions": len(pool),
             "max_sessions": pool.max_sessions,

@@ -256,7 +256,7 @@ class TileScheduler:
         self.monitor.start()
         values = np.asarray(
             engine.tile_statistics(lane.stat, lane.invariants, tile))
-        self.monitor.stop(self._step_counter)
+        step_rec = self.monitor.stop(self._step_counter)
         lane.tiles_run += 1
         self.tiles_run += 1
         # the padded tail rows are real gathers — charged like the
@@ -264,7 +264,8 @@ class TileScheduler:
         lane.ws.obs.charge_perm_batch(
             f"serve:{parts[0][0].handle.method}", lane.stat.n, b, b)
         if self.metrics is not None:
-            self.metrics.record_tile(b, len(parts))
+            self.metrics.record_tile(b, len(parts),
+                                     seconds=step_rec.seconds)
         offset = 0
         for active, take in parts:
             rows = values[offset:offset + take]

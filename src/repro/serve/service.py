@@ -51,7 +51,14 @@ class ServeConfig:
     deadlines and ``max_queue`` backpressure apply). ``auto_tune`` runs
     the ``repro.tune`` solver at upload against each study's own (n, d).
     ``deadline_factor`` parameterizes the tile watchdog
-    (``runtime.monitor.StepMonitor``)."""
+    (``runtime.monitor.StepMonitor``).
+
+    The ``slo_*_s`` thresholds (all optional) arm the latency SLOs:
+    queue wait (submit → activation), tile execution, and end-to-end
+    request latency samples past a threshold tick the matching breach
+    counter in ``serve_report()["slo"]`` — the alerting hook a fleet
+    dashboard scrapes (``ServeMetrics.prometheus()``) without the
+    service ever failing a request over a slow tile."""
 
     batch_size: int = 32
     max_sessions: int = 8
@@ -63,6 +70,9 @@ class ServeConfig:
     auto_tune: bool = True
     observe: bool = True
     deadline_factor: float = 20.0
+    slo_queue_wait_s: Optional[float] = None
+    slo_tile_s: Optional[float] = None
+    slo_request_s: Optional[float] = None
 
 
 class RequestHandle:
@@ -152,7 +162,10 @@ class AnalysisService:
         self.pool = SessionPool(self.config.max_sessions,
                                 self.config.max_bytes)
         self.queue = RequestQueue(self.config.max_queue)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(slo={
+            "queue_wait": self.config.slo_queue_wait_s,
+            "tile": self.config.slo_tile_s,
+            "request": self.config.slo_request_s})
         self.scheduler = TileScheduler(
             batch_size=self.config.batch_size, metrics=self.metrics)
         self.scheduler.monitor.deadline_factor = self.config.deadline_factor
@@ -273,6 +286,8 @@ class AnalysisService:
         spot for ``pcoa``). Statistic-construction failures — bad
         grouping length, mismatched operand sizes, collinear partial-
         Mantel controls — become ``bad_request`` rejections."""
+        self.metrics.record_queue_wait(
+            time.perf_counter() - handle.t_submit)
         ws = self.pool.get(handle.study_id)
         if ws is None:                        # evicted while queued
             handle.reject(Rejection(

@@ -1,6 +1,7 @@
 """Shared fixtures. Deliberately does NOT set
 --xla_force_host_platform_device_count: tests must see the real host
-device (the 512-device override belongs to launch/dryrun.py only).
+device (nothing in-tree sets the 512-device override since the
+launch/dryrun retirement).
 Distributed tests spawn subprocesses with their own flags."""
 
 import jax

@@ -1,0 +1,329 @@
+"""Measured-vs-modeled telemetry: obs.probe / obs.drift / obs.metrics /
+the trajectory gate.
+
+The probes are ahead-of-time: ``jit(...).lower(avals).compile()`` with
+symbolic ShapeDtypeStructs, so nothing here executes a kernel — tests
+pay compile time only. The drift parity tests pin the one empirical
+fact the whole subsystem stands on: the compiled scan program's
+HLO-counted bytes land inside the analytic envelope the DriftSentinel
+derives from the ledger/tune cost models.
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import drift, probe
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, NULL_HISTOGRAM,
+                               Counter, Gauge, Histogram, prometheus_text)
+
+
+# --------------------------------------------------------------------------
+# HLO text counting — hand-written programs with known answers
+# --------------------------------------------------------------------------
+_TOY_HLO = """\
+HloModule toy
+
+%body (p: (s32[], f32[100])) -> (s32[], f32[100]) {
+  %p = (s32[], f32[100]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[100]) %p), index=0
+  %x = f32[100]{0} get-tuple-element((s32[], f32[100]) %p), index=1
+  %y = f32[100]{0} add(f32[100]{0} %x, f32[100]{0} %x)
+  ROOT %t = (s32[], f32[100]) tuple(s32[] %i, f32[100]{0} %y)
+}
+
+%cond (p: (s32[], f32[100])) -> pred[] {
+  %p = (s32[], f32[100]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[100]) %p), index=0
+  %k = s32[] constant(8)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %k), direction=LT
+}
+
+ENTRY %main (arg: f32[100]) -> f32[100] {
+  %arg = f32[100]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[100]) tuple(s32[] %zero, f32[100]{0} %arg)
+  %w = (s32[], f32[100]) while((s32[], f32[100]) %init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %out = f32[100]{0} get-tuple-element((s32[], f32[100]) %w), index=1
+}
+"""
+
+
+def test_trip_count_from_known_trip_count_hint():
+    mult, bodies = probe.computation_multipliers(_TOY_HLO)
+    assert mult["body"] == 8
+    assert "body" in bodies
+
+
+def test_scan_correction_adds_body_repeats():
+    # the body's only counted line is the add — printed as output +
+    # two operands, 3 x f32[100] = 1200 bytes (get-tuple-element /
+    # tuple / parameter are free); raw XLA-style counting sees the body
+    # once, the corrected count sees it trip_count times
+    comps = probe._split_computations(_TOY_HLO)
+    assert probe.body_once_bytes(comps["body"], comps) == 1200
+    corrected, trips = probe.scan_corrected_bytes(_TOY_HLO, raw_bytes=1000)
+    assert trips == {"body": 8}
+    assert corrected == 1000 + 7 * 1200
+
+
+def test_trip_count_from_compare_constant_when_no_hint():
+    hlo = _TOY_HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"8"}}', "")
+    mult, _ = probe.computation_multipliers(hlo)
+    assert mult["body"] == 8          # recovered from `compare(i, k), LT`
+
+
+def test_shape_bytes_parser():
+    assert probe._shape_bytes("f32[100]{0}") == 400
+    assert probe._shape_bytes("s32[4,8]") == 128
+    assert probe._shape_bytes("pred[]") == 1
+    assert probe._shape_bytes("f32[]") == 4
+
+
+# --------------------------------------------------------------------------
+# Live probes — compiled production entry points
+# --------------------------------------------------------------------------
+def test_probe_permute_reduce_record_fields():
+    rec = probe.probe_permute_reduce(96, batch=8)
+    assert rec.name == "kernels.permute_reduce"
+    assert rec.backend == "cpu"
+    m = 96 * 95 // 2
+    # inputs: xc (m,) f32 + ys (1, m) f32 + orders (8, 96) i32 + ii/jj
+    expected_args = 4 * m + 4 * m + 4 * 8 * 96 + 2 * 4 * m
+    assert rec.argument_bytes == expected_args
+    assert rec.output_bytes == 4 * 8          # (s, B) f32 statistics
+    assert rec.bytes_corrected >= rec.argument_bytes + rec.output_bytes
+    assert rec.peak_bytes >= rec.argument_bytes
+    assert rec.flops > 0
+    d = rec.to_dict()
+    json.dumps(d)                              # serializable
+    assert d["params"]["n"] == 96
+
+
+def test_probe_memoizes_by_geometry():
+    probe.clear_probe_cache()
+    r1 = probe.probe_permute_reduce(96, batch=8)
+    r2 = probe.probe_permute_reduce(96, batch=8)
+    assert r1 is r2                            # process memo hit
+    r3 = probe.probe_permute_reduce(96, batch=16)
+    assert r3 is not r1
+
+
+def test_probe_stream_pass_counts_exactly_two_passes():
+    n = 1 << 20
+    rec = probe.probe_stream_pass(n)
+    # read + write, no scan, no temp inflation on an elementwise pass
+    assert rec.bytes_corrected == 2 * 4 * n
+    assert rec.scan_trips == {}
+
+
+# --------------------------------------------------------------------------
+# Drift parity — the ISSUE acceptance geometry (n=2048, B=32)
+# --------------------------------------------------------------------------
+def test_drift_parity_permute_reduce_scan_regime():
+    rec = probe.probe_permute_reduce(2048, batch=32)
+    sent = drift.DriftSentinel(backend="cpu")
+    verdicts = sent.check_permute_reduce(rec)
+    assert {v.quantity for v in verdicts} == {"bytes", "peak"}
+    for v in verdicts:
+        assert v.within, (v.quantity, v.measured, v.expected_lo,
+                          v.expected_hi, v.note)
+    by_q = {v.quantity: v for v in verdicts}
+    # scan regime at n=2048 (m >> chunk): the closed form should be
+    # TIGHT, not just inside the slackened envelope
+    b = by_q["bytes"]
+    assert b.regime == "scan"
+    m = 2048 * 2047 // 2
+    m_pad = -(-m // 65536) * 65536
+    eff = 4.0 * (m_pad * (5 * 32 + 3 * 1 + 2) + m * (6 + 2 * 1))
+    assert 0.65 * eff <= rec.bytes_corrected <= 1.35 * eff
+
+
+def test_drift_rejects_square_gather_class_blowup():
+    # a hypothetical implementation that re-gathers the full condensed
+    # vector per permutation row moves ~B x the floor — the envelope
+    # must reject it even with CPU slack
+    rec = probe.probe_permute_reduce(2048, batch=32)
+    blown = probe.ProbeRecord(
+        name=rec.name, backend=rec.backend, flops=rec.flops,
+        bytes_accessed=rec.bytes_accessed,
+        bytes_corrected=11.0 * rec.bytes_corrected,
+        peak_bytes=rec.peak_bytes, argument_bytes=rec.argument_bytes,
+        output_bytes=rec.output_bytes, temp_bytes=rec.temp_bytes,
+        scan_trips=rec.scan_trips, params=rec.params)
+    verdicts = drift.DriftSentinel(backend="cpu").check_permute_reduce(blown)
+    assert not all(v.within for v in verdicts)
+
+
+def test_reconcile_full_record_set_within_tolerance():
+    recs = [probe.probe_permute_reduce(96, batch=8),
+            probe.probe_panel_stats(96, 24),
+            probe.probe_stream_pass(1 << 20)]
+    doc = drift.reconcile({r.name: r for r in recs})
+    assert doc["within_tolerance"] is True
+    assert doc["backend"] == "cpu"
+    names = {v["name"] for v in doc["verdicts"]}
+    assert names == {"kernels.permute_reduce", "dist.panel_stats",
+                     "tune.stream_pass"}
+    json.dumps(doc)
+
+
+def test_workspace_report_measured_and_drift_sections():
+    from repro.api.config import ExecConfig
+    from repro.api.workspace import Workspace
+    from repro.obs import ObsConfig
+
+    rng = np.random.default_rng(7)
+    ws = Workspace.from_features(
+        rng.random((48, 12)).astype(np.float32) + .01,
+        config=ExecConfig(obs=ObsConfig(enabled=True)))
+    ws.permanova(rng.integers(0, 3, 48), permutations=9)
+    rep = ws.report()
+    assert rep.measured, "probe section missing"
+    assert "kernels.permute_reduce" in rep.measured
+    assert rep.drift["verdicts"]
+    assert rep.drift_ok
+    json.dumps(rep.to_dict())
+
+    # probe=False switches the sections off, nothing else changes
+    ws2 = Workspace.from_features(
+        rng.random((48, 12)).astype(np.float32) + .01,
+        config=ExecConfig(obs=ObsConfig(enabled=True, probe=False)))
+    ws2.permanova(rng.integers(0, 3, 48), permutations=9)
+    rep2 = ws2.report()
+    assert rep2.measured == {} and rep2.drift == {}
+    assert rep2.drift_ok                        # vacuously green
+
+
+# --------------------------------------------------------------------------
+# obs.metrics — the allocation-light primitives
+# --------------------------------------------------------------------------
+def test_histogram_percentiles_and_quantile_bounds():
+    h = Histogram("t")
+    for v in [0.001, 0.002, 0.004, 0.1, 0.2]:
+        h.record(v)
+    p = h.percentiles()
+    assert p["count"] == 5
+    assert p["max"] == pytest.approx(0.2)
+    # quantiles are interpolated within buckets but always clamped to
+    # the observed [min, max] — a nonzero sample set never reports 0
+    assert 0.001 <= p["p50"] <= 0.2
+    assert 0.001 <= p["p99"] <= 0.2
+    assert p["mean"] == pytest.approx(np.mean([0.001, 0.002, 0.004,
+                                               0.1, 0.2]))
+
+
+def test_histogram_record_is_fast_and_allocation_light():
+    h = Histogram("t")
+    n = 20000
+    t0 = time.perf_counter()
+    for i in range(n):
+        h.record(0.001 * (i % 97 + 1))
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 20e-6, f"record() {per_call * 1e6:.1f}us >= 20us"
+    # fixed buckets: counts array never grows with samples
+    assert len(h.counts) == len(DEFAULT_LATENCY_BUCKETS) + 1
+
+
+def test_null_histogram_is_inert():
+    NULL_HISTOGRAM.record(123.0)
+    assert NULL_HISTOGRAM.count == 0
+    assert NULL_HISTOGRAM.percentiles() == {}
+    assert NULL_HISTOGRAM.enabled is False
+
+
+def test_counter_gauge_and_prometheus_exposition():
+    c = Counter("reqs_total")
+    c.inc()
+    c.inc(2)
+    g = Gauge("depth")
+    g.set(7)
+    h = Histogram("lat_seconds")
+    h.record(0.005)
+    text = prometheus_text([c, g, h])
+    assert "# TYPE reqs_total counter" in text
+    assert "reqs_total 3.0" in text
+    assert "depth 7.0" in text
+    assert "# TYPE lat_seconds histogram" in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "lat_seconds_count 1" in text
+    for line in text.splitlines():             # exposition format sanity
+        assert line.startswith("#") or " " in line
+
+
+# --------------------------------------------------------------------------
+# calibrate(mode="probe") — deterministic budget calibration
+# --------------------------------------------------------------------------
+def test_calibrate_probe_mode_is_deterministic():
+    from repro.tune.budget import calibrate, detect_budget
+
+    b1 = calibrate(mode="probe", large=1 << 20)
+    b2 = calibrate(mode="probe", large=1 << 20)
+    assert b1.source == "probed"
+    assert b1.bandwidth == b2.bandwidth        # no clock involved
+    # the compiled stream pass moves exactly the modeled 2 passes on
+    # CPU, so probe calibration reproduces the static default
+    assert b1.bandwidth == pytest.approx(detect_budget().bandwidth)
+    with pytest.raises(ValueError):
+        calibrate(mode="nonsense")
+
+
+# --------------------------------------------------------------------------
+# Trajectory ledger + gate
+# --------------------------------------------------------------------------
+def test_trajectory_record_gate_rebaseline_roundtrip(tmp_path):
+    from benchmarks import trajectory
+
+    jsonl = str(tmp_path / "traj.jsonl")
+    base = str(tmp_path / "base.json")
+    metrics = {"mantel.ratio_vs_square_gather.n64": 8.6,
+               "probe.permute_reduce.bytes.n256": 8.9e6}
+    trajectory.record("smoke", metrics, path=jsonl)
+    trajectory.rebaseline(jsonl, base)
+    # identical run: green
+    assert trajectory.check("smoke", metrics, path=jsonl,
+                            baseline_path=base) == []
+    # ratio regression (win shrank) and byte regression (cost grew)
+    bad = {"mantel.ratio_vs_square_gather.n64": 8.6 * 0.9,
+           "probe.permute_reduce.bytes.n256": 8.9e6 * 1.5}
+    with pytest.raises(SystemExit):
+        trajectory.check("smoke", bad, path=jsonl, baseline_path=base)
+    fails = trajectory.check("smoke", bad, path=jsonl, baseline_path=base,
+                             raise_on_failure=False)
+    assert len(fails) == 2
+    # inside tolerance: green both directions
+    ok = {"mantel.ratio_vs_square_gather.n64": 8.6 * 0.97,
+          "probe.permute_reduce.bytes.n256": 8.9e6 * 1.2}
+    assert trajectory.check("smoke", ok, path=jsonl,
+                            baseline_path=base) == []
+    # unknown metrics pass until the next reseed
+    assert trajectory.gate({"new.metric.n8": 1.0},
+                           trajectory.load_baseline(base)) == []
+
+
+def test_trajectory_flatten_shapes():
+    from benchmarks import trajectory
+
+    m = trajectory.flatten("mantel", {
+        64: {"ratio_vs_square_gather": 8.0, "ratio_vs_original": 12.0},
+        "meta": {"ignored": True}})
+    assert m == {"mantel.ratio_vs_square_gather.n64": 8.0,
+                 "mantel.ratio_vs_original.n64": 12.0}
+    with pytest.raises(ValueError):
+        trajectory.flatten("nope", {})
+
+
+def test_committed_baseline_matches_current_probe_measurements():
+    """The committed trajectory_baseline.json must gate green against a
+    fresh probe of this container — otherwise CI is red on arrival."""
+    from benchmarks import trajectory
+
+    base = trajectory.load_baseline()
+    assert base, "benchmarks/trajectory_baseline.json missing or empty"
+    probed = {k: v for k, v in trajectory.probe_metrics().items()
+              if k in base}
+    assert probed
+    assert trajectory.gate(probed, base) == []

@@ -164,6 +164,20 @@ def test_monitor_live_start_stop_records_spans():
         sum(r.seconds for r in m.records))
 
 
+def test_monitor_summary_carries_histogram_percentiles():
+    m = StepMonitor(warmup=100)                # no straggler flagging
+    for i in range(20):
+        m.record(i, 0.01 * (1 + (i % 5)))      # 0.01 .. 0.05
+    s = m.summary()
+    assert s["steps"] == 20
+    # the new percentile dialect (obs.metrics.Histogram) sits beside
+    # the exact median/p90 kept for earlier-report compatibility
+    assert 0.01 <= s["p50_s"] <= 0.05
+    assert s["p50_s"] <= s["p95_s"] <= s["p99_s"] <= 0.05
+    assert s["median_s"] == pytest.approx(0.03)
+    assert s["stragglers"] == 0
+
+
 def test_monitor_shares_a_session_tracer():
     from repro.obs.trace import Tracer
     t = Tracer()

@@ -421,6 +421,52 @@ class TestServeReport:
         names = [s["name"] for s in rep["spans"]]
         assert any(n.startswith("request:mantel") for n in names)
 
+    def test_latency_histograms_in_report(self, svc):
+        svc.submit("x", "mantel", other="y", permutations=33, key=0)
+        svc.submit("x", "permanova", grouping=GROUPING, permutations=17,
+                   key=1)
+        svc.run()
+        lat = serve_report(svc)["latency"]
+        assert set(lat) == {"queue_wait_s", "tile_s", "request_s"}
+        req = lat["request_s"]
+        assert req["count"] == 2
+        assert req["p50"] > 0 and req["p95"] >= req["p50"]
+        assert req["p99"] <= req["max"]
+        # every executed tile was timed through the StepMonitor span
+        assert lat["tile_s"]["count"] == svc.scheduler.tiles_run
+        # both requests waited in the queue before activation
+        assert lat["queue_wait_s"]["count"] == 2
+
+    def test_slo_breach_counters(self):
+        # thresholds of 0 seconds: every sample is a breach — the
+        # counters must tick without affecting results
+        s = _service(slo_queue_wait_s=0.0, slo_tile_s=0.0,
+                     slo_request_s=0.0)
+        s.upload("x", features=_features(24, 6, seed=1))
+        s.upload("y", features=_features(24, 5, seed=2))
+        h = s.submit("x", "mantel", other="y", permutations=33, key=0)
+        s.run()
+        assert h.status == "done"
+        slo = serve_report(s)["slo"]
+        assert slo["thresholds_s"] == {"queue_wait": 0.0, "tile": 0.0,
+                                       "request": 0.0}
+        assert slo["breaches"]["request"] == 1
+        assert slo["breaches"]["tile"] == s.scheduler.tiles_run
+        assert slo["breaches"]["queue_wait"] == 1
+        # unset thresholds -> empty map, zero breaches (default svc)
+        s2 = _service()
+        assert serve_report(s2)["slo"] == {
+            "thresholds_s": {},
+            "breaches": {"queue_wait": 0, "tile": 0, "request": 0}}
+
+    def test_prometheus_exposition(self, svc):
+        svc.submit("x", "mantel", other="y", permutations=33, key=0)
+        svc.run()
+        text = svc.metrics.prometheus()
+        assert "# TYPE serve_request_seconds histogram" in text
+        assert 'serve_request_seconds_bucket{le="+Inf"} 1' in text
+        assert "serve_slo_breach_request_total 0.0" in text
+
     def test_rejections_counted_in_gauges(self, svc):
         with pytest.raises(Rejected):
             svc.submit("ghost", "permanova", grouping=GROUPING)
