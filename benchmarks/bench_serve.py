@@ -19,16 +19,34 @@ Gates (asserted, not just reported):
 * every hoist artifact charged exactly once per study, independent of R;
 * the ledger's recorded perm traffic == tiles × B × condensed_fused(n,B).
 
-``run()`` writes ``BENCH_serve.json`` (full sizes); ``--fast`` and
-``--smoke`` run smaller without touching the tracked artifact.
+The chaos half (``run_chaos`` / ``--chaos``) turns the ``repro.faults``
+plane on the same workload — a bounded seed sweep of mixed injected
+faults (transient tile errors, OOM, NaN poison, hoist/compile failures)
+plus one deterministic crash/recovery scenario — and gates on the
+recovery invariants, never wall-clock:
+* every request terminates (done / degraded / rejected), no hangs;
+* every COMPLETED request's p-value is bitwise-equal to the fault-free
+  run (retries re-execute identical rows; poisoned tiles never reach
+  the exceedance counts);
+* retry amplification (re-executed rows / useful rows) stays under a
+  fixed cap — a retry storm fails the suite before it fails a fleet;
+* journal recovery executes exactly the remaining ``ceil(ΣK/B) − t``
+  tiles after a crash at tile t, with zero re-hoists.
+
+``run()`` writes ``BENCH_serve.json`` (full sizes; the ``chaos``
+section carries the sweep's receipts); ``--fast`` and ``--smoke`` run
+smaller without touching the tracked artifact.
 """
 
 import json
 import math
+import os
+import tempfile
 import time
 
 import numpy as np
 
+from repro.faults import FaultPlan
 from repro.obs.ledger import perm_traffic_floats
 from repro.serve import AnalysisService, ServeConfig
 
@@ -100,8 +118,160 @@ def _workload(n: int, permutations: int, batch: int, requests: int,
     }
 
 
+# --------------------------------------------------------------------------
+# The chaos suite
+# --------------------------------------------------------------------------
+#: injected-fault rates for the sweep — aggressive enough that every
+#: recovery path fires across a few seeds, bounded enough to terminate
+#: fast (stall/evict have their own targeted tests in tests/test_faults)
+CHAOS_RATES = dict(tile_error=0.10, oom=0.03, nan=0.03, slow=0.0,
+                   compile_rate=0.20)
+
+#: re-executed rows per useful row; a chaos run past this is a retry
+#: storm, not graceful degradation (at the sweep's rates the expected
+#: value is ~0.2 — the cap leaves room for an unlucky seed, not a storm)
+RETRY_AMPLIFICATION_CAP = 2.0
+
+
+def _serve_pair(n: int, batch: int, requests: int, seed: int = 0,
+                **cfg) -> AnalysisService:
+    """One service with the x/y study pair uploaded (shared by the
+    coalescing and chaos workloads — identical data per seed)."""
+    rng = np.random.default_rng(seed)
+    svc = AnalysisService(ServeConfig(batch_size=batch, timeout_s=None,
+                                      max_active=requests,
+                                      auto_tune=False, **cfg))
+    svc.upload("x", features=rng.random((n, 32)).astype(np.float32))
+    svc.upload("y", features=rng.random((n, 32)).astype(np.float32))
+    return svc
+
+
+def _submit_all(svc: AnalysisService, requests: int, permutations: int):
+    ks = [min(REQUEST_KS[i % len(REQUEST_KS)], permutations)
+          for i in range(requests)]
+    return ks, [svc.submit("x", "mantel", other="y", permutations=k,
+                           key=i) for i, k in enumerate(ks)]
+
+
+def run_chaos(n: int = 256, permutations: int = 199, batch: int = 16,
+              requests: int = 6, seeds=(0, 1, 2)) -> dict:
+    """The seeded chaos sweep + the crash/recovery scenario, gated."""
+    # -- the fault-free reference: the bitwise target --------------------
+    ref_svc = _serve_pair(n, batch, requests)
+    ks, ref_handles = _submit_all(ref_svc, requests, permutations)
+    ref_svc.run()
+    assert all(h.status == "done" for h in ref_handles)
+    ref_p = {h.request_id: h.result.p_value for h in ref_handles}
+
+    per_seed = {}
+    for seed in seeds:
+        svc = _serve_pair(n, batch, requests,
+                          fault_plan=FaultPlan.chaos(seed=seed,
+                                                     **CHAOS_RATES))
+        _, handles = _submit_all(svc, requests, permutations)
+        t0 = time.perf_counter()
+        svc.run()
+        wall = time.perf_counter() - t0
+        # gate: every request terminated — no hangs under any schedule
+        hung = [h.request_id for h in handles if not h.done]
+        assert not hung, f"seed {seed}: requests never terminated: {hung}"
+        # gate: completed results are bitwise the fault-free ones
+        for h in handles:
+            if h.status == "done":
+                assert h.result.p_value == ref_p[h.request_id], \
+                    (seed, h.request_id, h.result.p_value,
+                     ref_p[h.request_id])
+        # gate: bounded retry amplification
+        amp = svc.metrics.retry_amplification
+        assert amp <= RETRY_AMPLIFICATION_CAP, \
+            f"seed {seed}: retry amplification {amp:.2f} > " \
+            f"{RETRY_AMPLIFICATION_CAP}"
+        per_seed[seed] = {
+            "statuses": {s: sum(h.status == s for h in handles)
+                         for s in ("done", "degraded", "rejected")},
+            "injected": dict(svc.metrics.faults),
+            "tile_failures": dict(svc.metrics.tile_failures),
+            "retries": svc.metrics.retries,
+            "retry_amplification": amp,
+            "breaker_trips": svc.metrics.breaker_trips,
+            "pool_sheds": svc.metrics.pool_sheds,
+            "bitwise_completed": sum(h.status == "done" for h in handles),
+            "wall_s": wall,
+        }
+
+    # -- crash/recovery: resume without re-running or re-hoisting --------
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_chaos_"),
+                        "serve.journal")
+    svc = _serve_pair(n, batch, requests, journal_path=path)
+    _submit_all(svc, requests, permutations)
+    total_tiles = math.ceil(sum(ks) / batch)
+    crash_after = total_tiles // 3
+    while svc.scheduler.tiles_run < crash_after:
+        svc.step()
+    pool = svc.pool                         # sessions survive the crash
+    svc.journal.close()
+    hoists_before = {sid: dict(pool._sessions[sid].cache.misses)
+                     for sid in pool.studies()}
+    svc2, handles = AnalysisService.recover(
+        path, pool=pool,
+        config=ServeConfig(batch_size=batch, timeout_s=None,
+                           max_active=requests, auto_tune=False))
+    svc2.run()
+    # gate: exactly the remaining tiles ran — completed blocks stayed done
+    assert svc2.scheduler.tiles_run == total_tiles - crash_after, \
+        (svc2.scheduler.tiles_run, total_tiles, crash_after)
+    # gate: nothing re-hoisted (counters pinned at their pre-crash state)
+    for sid in pool.studies():
+        assert dict(pool._sessions[sid].cache.misses) == \
+            hoists_before[sid], sid
+    # gate: recovered results are bitwise the uninterrupted ones,
+    # matched per request id (a request already terminal at the crash
+    # is NOT resubmitted — its journaled terminal stands and its tiles
+    # are among the ones recovery never re-runs)
+    assert all(h.status == "done" for h in handles.values()), \
+        {rid: h.status for rid, h in handles.items()}
+    for old_rid, h in handles.items():
+        assert h.result.p_value == ref_p[old_rid], \
+            (old_rid, h.result.p_value, ref_p[old_rid])
+    recovery = {
+        "tiles_total": total_tiles,
+        "crash_after_tiles": crash_after,
+        "tiles_after_recovery": svc2.scheduler.tiles_run,
+        "rehoists": 0,
+        "resumed_requests": svc2.metrics.resumes,
+        "resumed_rows": svc2.metrics.resumed_rows,
+        "already_terminal": requests - len(handles),
+        "recovered_bitwise": len(handles),
+    }
+    return {"n": n, "batch": batch, "requests": requests,
+            "per_request_k": ks, "rates": dict(CHAOS_RATES),
+            "retry_amplification_cap": RETRY_AMPLIFICATION_CAP,
+            "seeds": {str(s): r for s, r in per_seed.items()},
+            "recovery": recovery}
+
+
+def print_chaos(c: dict) -> None:
+    print(f"\n## serve — chaos soak (n={c['n']}, R={c['requests']}, "
+          f"B={c['batch']}; gates: all terminate, completed bitwise, "
+          f"amplification <= {c['retry_amplification_cap']})")
+    print(f"{'seed':>6s} {'done':>5s} {'degr':>5s} {'rej':>5s} "
+          f"{'retries':>8s} {'amp':>6s} {'breaker':>8s}")
+    for seed, r in c["seeds"].items():
+        st = r["statuses"]
+        print(f"{seed:>6s} {st['done']:5d} {st['degraded']:5d} "
+              f"{st['rejected']:5d} {r['retries']:8d} "
+              f"{r['retry_amplification']:6.2f} {r['breaker_trips']:8d}")
+    rec = c["recovery"]
+    print(f"# recovery: crash @ tile {rec['crash_after_tiles']}/"
+          f"{rec['tiles_total']} -> {rec['tiles_after_recovery']} tiles "
+          f"to finish, {rec['rehoists']} re-hoists, "
+          f"{rec['resumed_rows']} rows resumed, "
+          f"{rec['recovered_bitwise']} results bitwise")
+
+
 def run(sizes=(512, 2048), permutations: int = 999, batch: int = 32,
-        requests: int = 12, out_json: str = "BENCH_serve.json") -> dict:
+        requests: int = 12, out_json: str = "BENCH_serve.json",
+        chaos: bool = True) -> dict:
     print(f"\n## serve — cross-request tile coalescing "
           f"(R={requests} concurrent mantel requests per study, "
           f"mixed K, B={batch}; gates are analytic + ledger-verified)")
@@ -114,11 +284,19 @@ def run(sizes=(512, 2048), permutations: int = 999, batch: int = 32,
         print(f"{n:6d} {r['tiles_coalesced']:7d} "
               f"{r['tile_ratio']:7.2f}x {r['traffic_ratio']:7.2f}x "
               f"{len(r['hoist_builds']):7d} {r['wall_s'] * 1e3:6.0f}ms")
+    if chaos:
+        # the chaos receipts ride the same artifact (non-int key: the
+        # trajectory gate reads only the sized coalescing entries)
+        results["chaos"] = run_chaos(batch=16, requests=6)
+        print_chaos(results["chaos"])
     if out_json:
         payload = {"suite": "serve", "permutations": permutations,
                    "batch": batch, "requests": requests,
                    "request_ks": list(REQUEST_KS),
-                   "results": {str(k): v for k, v in results.items()}}
+                   "results": {str(k): v for k, v in results.items()
+                               if isinstance(k, int)}}
+        if chaos:
+            payload["chaos"] = results["chaos"]
         with open(out_json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {out_json}")

@@ -36,7 +36,12 @@ Suites:
     requests against one pooled study, gated on the coalescing bound
     (tiles == ceil(ΣK/B)), hoists charged once per study, and the
     session ledger's perm traffic matching perm_traffic_floats; writes
-    BENCH_serve.json at n ∈ {512, 2048}.
+    BENCH_serve.json at n ∈ {512, 2048}, with the chaos sweep's
+    receipts in its "chaos" section. With --chaos, runs ONLY the
+    seeded fault-injection soak (repro.faults): all requests must
+    terminate, completed p-values must be bitwise-equal to the
+    fault-free run, retry amplification stays capped, and journal
+    recovery runs exactly the remaining tiles with zero re-hoists.
 
 ``--smoke`` runs the dist + api + mantel suites at tiny sizes with NO
 BENCH artifact written — the CI guard that the benchmark entry points
@@ -122,6 +127,13 @@ def main() -> None:
     ap.add_argument("--report", default="RunReport_smoke.json",
                     help="where --smoke writes the RunReport JSON "
                          "(uploaded by CI as a workflow artifact)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --suite serve: run ONLY the seeded "
+                         "chaos-soak sweep (bounded seeds, no BENCH "
+                         "artifacts) — gates on termination, bitwise-"
+                         "equal completed p-values, retry amplification, "
+                         "and journal-recovery tile counts; never "
+                         "wall-clock")
     ap.add_argument("--suite", default="paper",
                     choices=("paper", "stats", "pcoa", "api", "dist",
                              "mantel", "tune", "serve"),
@@ -158,7 +170,7 @@ def main() -> None:
         # inside bench_serve._workload)
         smoke["serve"] = bench_serve.run(sizes=(64,), permutations=99,
                                          batch=16, requests=6,
-                                         out_json=None)
+                                         out_json=None, chaos=False)
         _smoke_report(args.report)
         # the perf-trajectory gate: every suite's analytic ratios plus
         # the compile-time probe measurements, appended to the JSONL
@@ -194,17 +206,34 @@ def main() -> None:
         return
 
     if args.suite == "serve":
+        if args.chaos:
+            # the chaos-soak job: every gate is asserted inside
+            # run_chaos (termination, bitwise-equal completed results,
+            # amplification cap, recovery tile counts) — reaching the
+            # summary print IS the pass
+            c = bench_serve.run_chaos()
+            bench_serve.print_chaos(c)
+            print("\n# chaos OK — all requests terminated under every "
+                  "seed, completed p-values bitwise-equal to the "
+                  "fault-free run, amplification bounded, recovery "
+                  "resumed without re-hoisting")
+            return
         if args.fast:
             # separate artifact: fast-mode numbers must not clobber the
             # tracked full-size trajectory file
+            # chaos is skipped here: the dedicated --chaos CI job owns
+            # the soak, and fast mode should stay fast
             s = bench_serve.run(sizes=(128, 256), permutations=199,
                                 batch=16, requests=8,
-                                out_json="BENCH_serve_fast.json")
+                                out_json="BENCH_serve_fast.json",
+                                chaos=False)
         else:
             s = bench_serve.run()
         print("\n# summary — coalesced serving vs per-request tiles "
               "(ledger-verified)")
         for n, r in s.items():
+            if not isinstance(n, int):     # the chaos receipts
+                continue
             print(f"serve           n={n:<6d} {r['tile_ratio']:6.2f}x "
                   f"fewer tiles, {r['traffic_ratio']:6.2f}x less perm "
                   f"traffic, hoists once per study")

@@ -114,17 +114,27 @@ async def main(n: int) -> None:
         return handle
 
     done, _ = await asyncio.gather(watch(watched), svc.arun())
-    print(f"[stream] final p={done.result.p_value:.4f} — inside every "
-          f"streamed interval by construction")
+    if done.result is not None:
+        print(f"[stream] final p={done.result.p_value:.4f} — inside every "
+              f"streamed interval by construction")
 
-    # -- results ---------------------------------------------------------
+    # -- results: payload() is one uniform shape for EVERY terminal
+    # state (done / degraded / rejected / timed_out), so the loop
+    # branches on status, never on which fields happen to exist --------
     print("\nrequest            status    result")
     for h in handles:
-        if h.method == "pcoa":
+        p = h.payload()
+        if p["error"] is not None:
+            desc = f"{p['error']['code']}: {p['error']['message'][:40]}"
+            if p["progress"] is not None:       # degraded: envelope
+                desc += (f"  p ∈ [{p['progress']['p_lo']:.4f}, "
+                         f"{p['progress']['p_hi']:.4f}]")
+        elif h.method == "pcoa":
             desc = f"coords {h.result.coordinates.shape}"
         else:
-            desc = (f"stat={h.result.statistic:+.4f} "
-                    f"p={h.result.p_value:.4f} (K={h.permutations})")
+            r = p["result"]
+            desc = (f"stat={r['statistic']:+.4f} "
+                    f"p={r['p_value']:.4f} (K={h.permutations})")
         print(f"{h.request_id:>4} {h.method:<14}{h.status:<8}  {desc}")
 
     # -- the service-wide report -----------------------------------------

@@ -1,3 +1,4 @@
+from repro.checkpoint.journal import Journal, replay
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "Journal", "replay"]

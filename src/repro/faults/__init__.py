@@ -1,0 +1,24 @@
+"""repro.faults: the deterministic fault-injection plane.
+
+Commodity/edge deployments make failures the common case, not the
+exception — so before a real transport or out-of-core IO can be layered
+on ``repro.serve``, the service needs a *defined* fault model. This
+package supplies the adversary half: seed-scheduled fault plans
+(:class:`FaultPlan`) polled at injection points inside the serve
+scheduler/service (:class:`FaultInjector`), deterministic enough that a
+chaos run's surviving results can be gated bitwise against the
+fault-free run. The recovery half — retry with backoff, per-lane
+circuit breakers, deadlines, journal recovery — lives in
+``repro.serve``; this package only ever *causes* trouble.
+"""
+
+from repro.faults.plan import (SITES, AllocFault, CompileFault, FaultError,
+                               FaultEvent, FaultInjector, FaultPlan,
+                               FaultSpec, PoisonError, StallFault,
+                               TransientTileError, unit_hash)
+
+__all__ = [
+    "FaultPlan", "FaultSpec", "FaultInjector", "FaultEvent", "SITES",
+    "FaultError", "TransientTileError", "AllocFault", "CompileFault",
+    "StallFault", "PoisonError", "unit_hash",
+]

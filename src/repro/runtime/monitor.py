@@ -46,6 +46,39 @@ class StepRecord:
     straggler: bool
 
 
+@dataclasses.dataclass(frozen=True)
+class EscalationRecord:
+    """One watchdog escalation: the structured record the serve retry
+    path consumes (instead of parsing a ``TimeoutError`` message).
+
+    ``elapsed_s`` is how long the offending step had been open,
+    ``deadline_s``/``median_s`` the watchdog state at escalation time,
+    ``reason`` the trigger, ``aborted_open_step`` whether an open step
+    span was force-closed as part of the escalation.
+    """
+
+    elapsed_s: float
+    deadline_s: float
+    median_s: float
+    reason: str
+    aborted_open_step: bool
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class DeadlineExceeded(TimeoutError):
+    """``check_deadline``'s raise, now carrying the structured
+    :class:`EscalationRecord` (``.record``) so the caller's recovery
+    path consumes data, not a message string. Subclasses
+    ``TimeoutError`` — existing ``except TimeoutError`` callers keep
+    working unchanged."""
+
+    def __init__(self, message: str, record: EscalationRecord):
+        super().__init__(message)
+        self.record = record
+
+
 class StepMonitor:
     """Step timer + straggler flagger over a span stream.
 
@@ -63,6 +96,7 @@ class StepMonitor:
         self.tracer = tracer if tracer is not None else Tracer()
         self._spans: List[Span] = []         # this monitor's step spans
         self._open: Optional[Span] = None
+        self.escalations: List[EscalationRecord] = []
 
     # -- timing ---------------------------------------------------------
     def start(self):
@@ -134,11 +168,52 @@ class StepMonitor:
         m = self.median
         return (m * self.deadline_factor) if m == m else float("inf")
 
-    def check_deadline(self, elapsed: float):
-        if elapsed > self.deadline():
-            raise TimeoutError(
+    def check_deadline(self, elapsed: float,
+                       reason: str = "straggler deadline exceeded"):
+        """Raise :class:`DeadlineExceeded` when ``elapsed`` outlives the
+        deadline — but first *emit* the structured
+        :class:`EscalationRecord` (appended to ``escalations`` and
+        carried on the exception), so a recovery path consumes the
+        record rather than re-deriving state from a message. The open
+        step span, if any, is left open: the caller decides whether to
+        ``abort()`` it (retry path) or tear the loop down."""
+        d = self.deadline()
+        if elapsed > d:
+            rec = EscalationRecord(
+                elapsed_s=elapsed, deadline_s=d, median_s=self.median,
+                reason=reason, aborted_open_step=False)
+            self.escalations.append(rec)
+            raise DeadlineExceeded(
                 f"step exceeded straggler deadline ({elapsed:.1f}s > "
-                f"{self.deadline():.1f}s) — checkpoint and evict")
+                f"{d:.1f}s) — checkpoint and evict", rec)
+
+    def abort(self, reason: str = "aborted") -> None:
+        """Force-close the open step span without scoring it.
+
+        The span still lands in the tracer (tagged ``aborted``) so the
+        timeline shows the failed attempt, but it is excluded from the
+        monitor's records/median — a half-run tile must not drag the
+        straggler baseline."""
+        if self._open is not None:
+            span = self._open
+            self._open = None
+            span.add(aborted=True, reason=reason)
+            span.end()
+
+    def escalate(self, reason: str) -> EscalationRecord:
+        """Escalate the open step *unconditionally* (no deadline check):
+        emit the structured record and abort the open span. The serve
+        scheduler uses this when it already *knows* a tile stalled (the
+        step span survived to the next loop turn) but no median exists
+        yet to arm the deadline — a watchdog that cannot fire before
+        warmup would let a first-tile stall hang the service."""
+        rec = EscalationRecord(
+            elapsed_s=self.elapsed() or 0.0, deadline_s=self.deadline(),
+            median_s=self.median, reason=reason,
+            aborted_open_step=self._open is not None)
+        self.escalations.append(rec)
+        self.abort(reason)
+        return rec
 
     def summary(self) -> dict:
         """Step-time distribution: exact median/p90 (kept for
@@ -162,4 +237,5 @@ class StepMonitor:
             "p95_s": pct.get("p95"),
             "p99_s": pct.get("p99"),
             "stragglers": len(self.stragglers()),
+            "escalations": len(self.escalations),
         }

@@ -16,15 +16,15 @@ from repro.serve.admission import (Rejected, Rejection, RequestQueue,
                                    validate_upload)
 from repro.serve.metrics import ServeMetrics, serve_report
 from repro.serve.pool import SessionPool
-from repro.serve.scheduler import (Lane, StreamUpdate, TileScheduler,
-                                   exceedances, operand_fingerprint,
-                                   partial_bounds)
+from repro.serve.scheduler import (Lane, RetryPolicy, StreamUpdate,
+                                   TileScheduler, exceedances,
+                                   operand_fingerprint, partial_bounds)
 from repro.serve.service import (METHODS, AnalysisService, RequestHandle,
                                  ServeConfig)
 
 __all__ = [
     "AnalysisService", "ServeConfig", "RequestHandle", "METHODS",
-    "SessionPool", "TileScheduler", "Lane", "StreamUpdate",
+    "SessionPool", "TileScheduler", "Lane", "StreamUpdate", "RetryPolicy",
     "RequestQueue", "Rejected", "Rejection", "validate_upload",
     "ServeMetrics", "serve_report", "partial_bounds", "exceedances",
     "operand_fingerprint",

@@ -8,8 +8,13 @@ the connection. This module owns both halves:
 * ``Rejection`` / ``Rejected`` — the error currency. Every refusal has a
   stable machine-readable ``code`` (``non_finite``, ``too_large``,
   ``bad_shape``, ``queue_full``, ``timeout``, ``unknown_study``,
-  ``bad_request``), a human message, and a detail dict; ``payload()`` is
-  the wire form.
+  ``bad_request`` — and, from the fault/recovery plane:
+  ``circuit_open`` when a lane's breaker quarantined the request,
+  ``stale_generation`` when its study was re-uploaded or evicted
+  mid-flight, ``deadline`` when an *active* request was cooperatively
+  cancelled past its deadline, ``cancelled`` for client aborts, and
+  ``unavailable`` when lane compilation failed repeatedly), a human
+  message, and a detail dict; ``payload()`` is the wire form.
 * ``validate_upload`` — the data gate, reusing the library's own checks
   (``core.validation.ensure_finite``; the ``n > MAX_TRIANGLE_N`` int32
   triangle guard every condensed-indexed kernel enforces) so the service

@@ -76,6 +76,20 @@ class ServeMetrics:
         }
         self.breaches = {name: Counter(f"serve_slo_breach_{name}_total")
                          for name in self.hist}
+        # -- fault/recovery accounting (the repro.faults control plane) --
+        self.faults = TallyCounter()         # injected, by "site:kind"
+        self.tile_failures = TallyCounter()  # failed tile attempts, by kind
+        self.retries = 0                     # tile attempts re-scheduled
+        self.retried_rows = 0                # rows re-executed by retries
+        self.backoff_s = 0.0                 # cumulative scheduled backoff
+        self.breaker_trips = 0
+        self.escalations = 0                 # watchdog stall escalations
+        self.cancels = TallyCounter()        # cancellations, by code
+        self.stale_terminations = 0          # stale_generation rejections
+        self.resumes = 0                     # journal-recovered requests
+        self.resumed_rows = 0                # rows NOT re-run thanks to it
+        self.degraded = 0                    # partial-envelope terminations
+        self.pool_sheds = 0                  # OOM-pressure evictions
 
     # -- recording ---------------------------------------------------------
     def _observe(self, name: str, seconds: float) -> None:
@@ -110,8 +124,13 @@ class ServeMetrics:
     def record_completion(self, handle, seconds: float) -> None:
         """A finished request: latency histogram + one pre-timed serve
         span (requests overlap, so live spans would corrupt the tracer's
-        nesting stack — ``record`` appends without opening one)."""
-        self.completed += 1
+        nesting stack — ``record`` appends without opening one). A
+        degraded termination counts separately — its envelope is a
+        partial answer, not a completion."""
+        if handle.status == "degraded":
+            self.degraded += 1
+        else:
+            self.completed += 1
         self._observe("request", seconds)
         self.tracer.record(f"request:{handle.method}", seconds,
                            phase="serve", request_id=handle.request_id,
@@ -120,6 +139,70 @@ class ServeMetrics:
 
     def sample_queue_depth(self, depth: int) -> None:
         self.queue_depth = depth
+
+    # -- fault/recovery recording ------------------------------------------
+    def record_fault(self, site: str, kind: str) -> None:
+        """One injected fault actually firing at a site."""
+        self.faults[f"{site}:{kind}"] += 1
+
+    def record_tile_failure(self, kind: str, rows: int) -> None:
+        """One failed tile attempt (injected or real); ``rows`` is the
+        tile's row count — work that produced nothing."""
+        self.tile_failures[kind] += 1
+
+    def record_retry(self, rows: int, backoff_s: float) -> None:
+        """A lane re-scheduled after a failed attempt: the retried rows
+        feed the amplification metric, the backoff the pacing one."""
+        self.retries += 1
+        self.retried_rows += rows
+        self.backoff_s += backoff_s
+
+    def record_breaker(self) -> None:
+        self.breaker_trips += 1
+
+    def record_escalation(self) -> None:
+        self.escalations += 1
+
+    def record_cancel(self, code: str) -> None:
+        self.cancels[code] += 1
+
+    def record_stale(self) -> None:
+        self.stale_terminations += 1
+
+    def record_resume(self, rows: int) -> None:
+        """One journal-recovered request resuming at ``rows`` draws —
+        rows the rebuilt service did NOT re-execute."""
+        self.resumes += 1
+        self.resumed_rows += rows
+
+    def record_shed(self) -> None:
+        self.pool_sheds += 1
+
+    @property
+    def retry_amplification(self) -> float:
+        """Rows re-executed by retries per successfully-executed row —
+        the chaos suite's boundedness gate (a retry storm shows up here
+        long before it shows up in latency)."""
+        return self.retried_rows / max(1, self.tile_rows)
+
+    def faults_report(self) -> dict:
+        """The fault/recovery section of ``serve_report()``."""
+        return {
+            "injected": dict(self.faults),
+            "tile_failures": dict(self.tile_failures),
+            "retries": self.retries,
+            "retried_rows": self.retried_rows,
+            "retry_amplification": self.retry_amplification,
+            "backoff_s": self.backoff_s,
+            "breaker_trips": self.breaker_trips,
+            "escalations": self.escalations,
+            "cancelled": dict(self.cancels),
+            "stale_terminations": self.stale_terminations,
+            "resumes": self.resumes,
+            "resumed_rows": self.resumed_rows,
+            "degraded": self.degraded,
+            "pool_sheds": self.pool_sheds,
+        }
 
     # -- gauges ------------------------------------------------------------
     def gauges(self) -> dict:
@@ -131,6 +214,7 @@ class ServeMetrics:
             "uploads": self.uploads,
             "admitted": self.admitted,
             "completed": self.completed,
+            "degraded": self.degraded,
             "rejected": dict(self.rejections),
             "throughput_rps": (self.completed / uptime) if uptime else 0.0,
             "latency_s": {
@@ -174,10 +258,16 @@ def serve_report(service) -> dict:
             "hoist_hits": {str(k): v for k, v in ws.cache.hits.items()},
             "ledger": (ws.obs.ledger.totals() if ws.obs.enabled else {}),
         }
+    faults = service.metrics.faults_report()
+    injector = getattr(service, "injector", None)
+    if injector is not None:
+        faults["plan"] = {"seed": injector.plan.seed,
+                          "fired": injector.summary()}
     return {
         "gauges": service.metrics.gauges(),
         "latency": service.metrics.latency(),
         "slo": service.metrics.slo_report(),
+        "faults": faults,
         "pool": {
             "sessions": len(pool),
             "max_sessions": pool.max_sessions,

@@ -94,6 +94,30 @@ class SessionPool:
         return list(self._sessions.keys())
 
     # -- eviction ----------------------------------------------------------
+    def drop(self, study_id: str) -> bool:
+        """Force-remove one session unconditionally (the fault plane's
+        eviction-race lever; ordinary budget pressure uses ``evict``).
+        The caller owns the consequences — in-flight requests bound to
+        the dropped study must be terminated via the scheduler's
+        ``invalidate_study``, which is exactly what the service does."""
+        if study_id in self._sessions:
+            del self._sessions[study_id]
+            self.evictions += 1
+            return True
+        return False
+
+    def shed(self, exclude=frozenset()) -> Optional[str]:
+        """Evict ONE least-recently-used victim outside ``exclude`` —
+        the allocator-pressure response (a real or injected OOM wants
+        bytes back *now*, not budget convergence). Returns the evicted
+        study id, or None when every session is excluded."""
+        for sid in self._sessions:
+            if sid not in exclude:
+                del self._sessions[sid]
+                self.evictions += 1
+                return sid
+        return None
+
     def evict(self, exclude=frozenset()) -> list:
         """Enforce both budgets, least-recently-used first; ``exclude``
         names studies that must survive (the just-admitted session, the

@@ -164,6 +164,56 @@ def test_monitor_live_start_stop_records_spans():
         sum(r.seconds for r in m.records))
 
 
+def test_monitor_deadline_emits_structured_escalation():
+    # the raise carries a structured EscalationRecord (and appends it to
+    # monitor.escalations) so the serve retry path consumes data, not a
+    # message string
+    from repro.runtime.monitor import DeadlineExceeded
+
+    m = StepMonitor(deadline_factor=5.0)
+    for i in range(4):
+        m.record(i, 0.1)
+    with pytest.raises(DeadlineExceeded) as ei:
+        m.check_deadline(1.0, reason="test stall")
+    rec = ei.value.record
+    assert rec.elapsed_s == 1.0
+    assert rec.deadline_s == pytest.approx(0.5)
+    assert rec.median_s == pytest.approx(0.1)
+    assert rec.reason == "test stall"
+    assert m.escalations == [rec]
+    assert m.summary()["escalations"] == 1
+    # DeadlineExceeded IS a TimeoutError: existing callers keep working
+    assert isinstance(ei.value, TimeoutError)
+
+
+def test_monitor_escalate_unconditional_before_median():
+    # a first-tile stall has no median to arm the deadline; escalate()
+    # must fire anyway, abort the open span, and keep it out of the
+    # straggler baseline
+    m = StepMonitor(deadline_factor=5.0)
+    assert m.deadline() == float("inf")
+    m.start()                                # a step opens ... and stalls
+    rec = m.escalate("stalled before any median")
+    assert rec.aborted_open_step
+    assert m._open is None                   # usable again immediately
+    assert m.records == []                   # aborted: not scored
+    assert m.median != m.median              # still no median (NaN)
+    assert m.escalations == [rec]
+    # the aborted attempt is still visible on the tracer timeline
+    spans = [s for s in m.tracer.to_dicts()
+             if s["attrs"].get("aborted")]
+    assert len(spans) == 1
+
+
+def test_monitor_abort_noop_when_idle():
+    m = StepMonitor()
+    m.abort()                                # no open step: no-op
+    m.start()
+    m.abort("giving up")
+    m.start()                                # reusable after abort
+    assert m.stop(0).seconds >= 0.0
+
+
 def test_monitor_summary_carries_histogram_percentiles():
     m = StepMonitor(warmup=100)                # no straggler flagging
     for i in range(20):
